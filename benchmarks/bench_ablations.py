@@ -1,0 +1,45 @@
+"""Paper §4.4 + §4.9 ablations: re-ranking and bloom-filter sizing.
+
+  * re-ranking on/off: the paper reports +10-15% recall from the re-rank.
+  * bloom z sweep: the paper tunes z DOWN to trade recall for speed (more
+    false positives -> more skipped nodes -> earlier convergence).
+  * eager (§4.6) on/off: candidate-selection pipelining must not cost recall.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import SearchConfig, brute_force_knn, recall_at_k
+
+from .common import bench_dataset, timeit
+
+
+def run(report) -> None:
+    data, queries, idx = bench_dataset()
+    k, t = 10, 128
+    gt = brute_force_knn(data, queries, k)
+
+    for rerank in (True, False):
+        cfg = SearchConfig(t=t, bloom_z=16384)
+        ids, _ = idx.search(queries, k, cfg=cfg, rerank=rerank)
+        r = recall_at_k(np.asarray(ids), gt)
+        report(f"s49_rerank_{'on' if rerank else 'off'}", 0.0, f"recall={r:.3f}")
+
+    for z in (16384, 2048, 512, 128):
+        cfg = SearchConfig(t=t, bloom_z=z)
+        ids, _, stats = idx.search(queries, k, cfg=cfg, return_stats=True)
+        r = recall_at_k(np.asarray(ids), gt)
+        report(
+            f"s44_bloom_z{z}", 0.0,
+            f"recall={r:.3f},mean_hops={stats.mean_hops:.0f}",
+        )
+
+    for eager in (True, False):
+        cfg = SearchConfig(t=t, bloom_z=16384, eager=eager)
+        ids, _ = idx.search(queries, k, cfg=cfg)
+        r = recall_at_k(np.asarray(ids), gt)
+        wall = timeit(lambda c=cfg: idx.search(queries, k, cfg=c)[0], repeats=2)
+        report(
+            f"s46_eager_{'on' if eager else 'off'}", wall / len(queries) * 1e6,
+            f"recall={r:.3f}",
+        )

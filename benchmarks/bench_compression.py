@@ -1,0 +1,33 @@
+"""Paper Fig 9: recall/throughput vs compression factor m.
+
+The paper's finding: recall is stable down to ~0.25 compression ratio, then
+degrades; throughput does NOT rise with smaller m because less accurate
+distances cost extra hops. Both effects are asserted in tests; here we
+measure the full sweep.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import BangIndex, SearchConfig, brute_force_knn, recall_at_k
+
+from .common import bench_dataset, timeit
+
+
+def run(report) -> None:
+    data, queries, idx_base = bench_dataset()
+    k, t = 10, 128
+    gt = brute_force_knn(data, queries, k)
+    d = data.shape[1]
+
+    for m in (32, 16, 8, 4, 2):
+        idx = BangIndex.build(data, m=m, graph=idx_base.graph)
+        cfg = SearchConfig(t=t, bloom_z=16384)
+        ids, _, stats = idx.search(queries, k, cfg=cfg, return_stats=True)
+        r = recall_at_k(np.asarray(ids), gt)
+        wall = timeit(lambda: idx.search(queries, k, cfg=cfg)[0], repeats=2)
+        report(
+            f"fig9_m{m}", wall / len(queries) * 1e6,
+            f"ratio={m/d:.2f},recall={r:.3f},qps={len(queries)/wall:.0f},"
+            f"hops={stats.mean_hops:.0f}",
+        )

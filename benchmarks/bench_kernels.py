@@ -1,0 +1,69 @@
+"""Paper §4.5 reduction-scheme table, adapted to TPU (DESIGN.md §2).
+
+The paper tunes atomicAdd vs CUB WarpReduce vs BlockReduce for the ADC
+accumulation. The TPU analogue is one-hot-x-table on the MXU vs per-lane
+gather on the VPU vs the fused-XLA jnp reference; plus the sort/merge kernels
+against lax.sort. Interpret-mode timings on CPU measure *relative* cost of
+the lowered structure only -- the structural choice (MXU matmul vs gather) is
+what transfers to hardware.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import pq as pqlib
+from repro.core.worklist import Worklist
+
+from .common import timeit
+
+
+def run(report) -> None:
+    rng = np.random.default_rng(0)
+    B, R, m = 64, 64, 74
+
+    table = jnp.asarray(rng.standard_normal((B, m, 256)).astype(np.float32) ** 2)
+    codes = jnp.asarray(rng.integers(0, 256, (B, R, m)).astype(np.int32))
+    valid = jnp.ones((B, R), bool)
+
+    from repro.kernels.pq_adc import ops as adc_ops
+
+    for variant in ("onehot", "gather"):
+        t = timeit(lambda v=variant: adc_ops.adc(table, codes, valid, variant=v))
+        report(f"s45_adc_pallas_{variant}", t * 1e6, f"B={B},R={R},m={m},interpret=1")
+    t = timeit(lambda: pqlib.adc_distance(table, codes))
+    report("s45_adc_xla_ref", t * 1e6, f"B={B},R={R},m={m}")
+
+    # sort + merge kernels vs lax.sort reference
+    from repro.kernels.bitonic import ops as bops
+
+    d = jnp.asarray(rng.standard_normal((B, R)).astype(np.float32))
+    i = jnp.asarray(rng.integers(0, 10_000, (B, R)).astype(np.int32))
+    t = timeit(lambda: bops.sort_kv(d, i))
+    report("s47_sort_bitonic_pallas", t * 1e6, f"B={B},n={R},interpret=1")
+    t = timeit(lambda: bops.sort_kv_ref(d, i))
+    report("s47_sort_lax_ref", t * 1e6, f"B={B},n={R}")
+
+    wl = Worklist(
+        dists=jnp.sort(jnp.asarray(rng.standard_normal((B, 64)).astype(np.float32)), -1),
+        ids=jnp.asarray(rng.integers(0, 1000, (B, 64)).astype(np.int32)),
+        visited=jnp.zeros((B, 64), bool),
+    )
+    sd = jnp.sort(d, -1)
+    t = timeit(lambda: bops.merge_worklist(wl, sd, i))
+    report("s48_merge_bitonic_pallas", t * 1e6, f"B={B},t=64,R={R},interpret=1")
+    t = timeit(lambda: bops.merge_ref(wl.dists, wl.ids, wl.visited, sd, i, 64))
+    report("s48_merge_lax_ref", t * 1e6, f"B={B},t=64,R={R}")
+
+    # table construction
+    from repro.core.pq import PQCodec
+    from repro.kernels.pq_table import ops as tops
+
+    cb = jnp.asarray(rng.standard_normal((m, 256, 2)).astype(np.float32))
+    q = jnp.asarray(rng.standard_normal((B, m * 2)).astype(np.float32))
+    codec = PQCodec(cb)
+    t = timeit(lambda: tops.build_dist_table(codec, q))
+    report("s42_table_pallas", t * 1e6, f"B={B},m={m},interpret=1")
+    t = timeit(lambda: pqlib.build_dist_table(codec, q))
+    report("s42_table_xla_ref", t * 1e6, f"B={B},m={m}")

@@ -1,0 +1,39 @@
+"""Paper Fig 5/7/8: throughput (QPS) vs recall, BANG vs brute-force baseline.
+
+CPU host stands in for the accelerator (numbers are relative, the shape of
+the QPS/recall frontier is the reproduced object). Sweeps the worklist size t
+exactly as the paper does to trace the curve; the brute-force scan is the
+exact baseline every ANNS must beat.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import SearchConfig, brute_force_knn, recall_at_k
+
+from .common import bench_dataset, timeit
+
+
+def run(report) -> None:
+    data, queries, idx = bench_dataset()
+    k = 10
+    gt = brute_force_knn(data, queries, k)
+
+    # brute-force baseline QPS
+    bf_t = timeit(lambda: brute_force_knn(data, queries, k), repeats=3)
+    report(
+        "fig5_bruteforce", bf_t / len(queries) * 1e6,
+        f"recall=1.000,qps={len(queries)/bf_t:.0f}",
+    )
+
+    for t in (16, 32, 64, 96, 128, 152):  # paper sweeps t up to 152
+        cfg = SearchConfig(t=t, bloom_z=16384)
+        ids, _ = idx.search(queries, k, variant="inmem", cfg=cfg)
+        r = recall_at_k(np.asarray(ids), gt)
+        wall = timeit(
+            lambda: idx.search(queries, k, variant="inmem", cfg=cfg)[0], repeats=3
+        )
+        report(
+            f"fig5_bang_inmem_t{t}", wall / len(queries) * 1e6,
+            f"recall={r:.3f},qps={len(queries)/wall:.0f}",
+        )

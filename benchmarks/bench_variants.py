@@ -1,0 +1,32 @@
+"""Paper Fig 6 / §7.2-7.3: BANG Base vs In-memory vs Exact-distance.
+
+Base keeps the graph behind a host callback (the PCIe-hop analogue); the
+in-memory variants must beat it, and Exact-distance must match/beat In-memory
+recall without re-ranking (§5.2).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import SearchConfig, brute_force_knn, recall_at_k
+
+from .common import bench_dataset, timeit
+
+
+def run(report) -> None:
+    data, queries, idx = bench_dataset()
+    k, t = 10, 128
+    gt = brute_force_knn(data, queries, k)
+    cfg = SearchConfig(t=t, bloom_z=16384)
+
+    for variant in ("base", "inmem", "exact"):
+        ids, _ = idx.search(queries, k, variant=variant, cfg=cfg)
+        r = recall_at_k(np.asarray(ids), gt)
+        wall = timeit(
+            lambda v=variant: idx.search(queries, k, variant=v, cfg=cfg)[0],
+            repeats=3,
+        )
+        report(
+            f"fig6_variant_{variant}", wall / len(queries) * 1e6,
+            f"recall={r:.3f},qps={len(queries)/wall:.0f}",
+        )

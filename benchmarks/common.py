@@ -1,0 +1,42 @@
+"""Shared benchmark harness: timing + dataset/index caching."""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import numpy as np
+
+from repro.core import BangIndex
+from repro.data import gaussian_mixture, uniform_queries
+
+
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1, **kwargs):
+    """Median wall time (s) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kwargs))
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kwargs))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+@functools.lru_cache(maxsize=4)
+def bench_dataset(n: int = 8000, d: int = 64, n_clusters: int = 64, seed: int = 0):
+    """Cached (data, queries, index) for the QPS/recall benchmarks.
+
+    Clustered corpus (descriptor-like local structure: greedy graph search
+    needs distance contrast -- an isotropic 64-d gaussian has none and is
+    unsearchable by ANY graph method at this dimension). R=32/L=64 mirrors
+    the paper's R=64/L=200 scaled to the 8k corpus.
+    """
+    data = gaussian_mixture(n, d, n_clusters=n_clusters, seed=seed)
+    queries = uniform_queries(data, 256, noise=0.05, seed=seed + 1)
+    idx = BangIndex.build(data, m=16, R=32, L_build=64, seed=seed)
+    return data, queries, idx
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,77 @@
+"""Render the §Roofline table from the dry-run JSON cache.
+
+    python -m benchmarks.roofline [--dir experiments/dryrun] [--mesh pod16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_records(directory: str, mesh: str | None = None) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def render_table(recs: list[dict]) -> str:
+    header = (
+        "| arch | shape | mesh | compute | memory | collective | dominant | "
+        "useful-FLOP ratio | roofline frac |\n"
+        "|---|---|---|---|---|---|---|---|---|\n"
+    )
+    rows = []
+    for r in recs:
+        if r.get("status") != "ok":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAILED | | | | | |"
+            )
+            continue
+        rf = r["roofline"]
+        dom_t = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        # roofline fraction: how much of the step is the unavoidable compute
+        frac = rf["compute_s"] / dom_t if dom_t else 0.0
+        ratio = rf.get("useful_flop_ratio")
+        ratio_s = f"{ratio:.2f}" if ratio else "-"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {fmt_s(rf['compute_s'])} | {fmt_s(rf['memory_s'])} "
+            f"| {fmt_s(rf['collective_s'])} | {rf['dominant']} "
+            f"| {ratio_s} | {frac:.2%} |"
+        )
+    return header + "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    recs = load_records(args.dir, args.mesh)
+    if not recs:
+        print("no dry-run records found; run python -m repro.launch.dryrun --all")
+        return
+    print(render_table(recs))
+    fails = [r for r in recs if r.get("status") != "ok"]
+    print(f"\n{len(recs)} cells, {len(fails)} failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = per-query wall
+time where meaningful, 0.0 for pure-quality measurements).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (
+        bench_ablations,
+        bench_compression,
+        bench_iterations,
+        bench_kernels,
+        bench_qps_recall,
+        bench_variants,
+    )
+
+    suites = [
+        ("qps_recall", bench_qps_recall),
+        ("variants", bench_variants),
+        ("compression", bench_compression),
+        ("iterations", bench_iterations),
+        ("kernels", bench_kernels),
+        ("ablations", bench_ablations),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+
+    print("name,us_per_call,derived")
+    rows = []
+
+    def report(name: str, us: float, derived: str) -> None:
+        line = f"{name},{us:.1f},{derived}"
+        rows.append(line)
+        print(line, flush=True)
+
+    for name, mod in suites:
+        if only and only != name:
+            continue
+        t0 = time.time()
+        mod.run(report)
+        print(f"# suite {name} done in {time.time()-t0:.0f}s", flush=True)
+    print(f"# {len(rows)} rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""BANG-KV demo: the paper's pipeline as long-context decode attention.
+
+Prefills a context with a small LM, fits PQ codebooks on the prefill keys
+(stage 0), then decodes with BANG-KV retrieval attention (ADC scan + exact
+re-rank over top-L + window) and compares next-token logits against exact
+full attention.
+
+    PYTHONPATH=src python examples/long_context_decode.py --context 192
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+from repro.models import retrieval_attention as bkv
+from repro.models.transformer import LM
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--context", type=int, default=192)
+    ap.add_argument("--decode-steps", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = configs.get("glm4-9b").reduced(
+        d_model=128, n_heads=8, n_kv_heads=2, head_dim=32,
+        d_ff=256, vocab_size=512, bangkv_m=8, bangkv_topl=32, bangkv_window=32,
+    )
+    lm = LM(cfg)
+    key = jax.random.PRNGKey(0)
+    params = lm.init(key)
+    B, S = 1, args.context
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+
+    print(f"[bangkv] prefill {S} tokens ...")
+    _, prefill_caches = jax.jit(lm.prefill)(params, {"tokens": tokens})
+
+    s_max = S + args.decode_steps
+    # exact caches: pad prefill K/V to decode length
+    pad = lambda c: type(c)(
+        k=jnp.pad(c.k, ((0, 0), (0, 0), (0, s_max - S), (0, 0), (0, 0))),
+        v=jnp.pad(c.v, ((0, 0), (0, 0), (0, s_max - S), (0, 0), (0, 0))),
+        index=c.index,
+    )
+    exact_caches = pad(prefill_caches)
+
+    # BANG-KV caches: fit codebooks per layer on the prefill keys (stage 0),
+    # encode the prefill keys, then decode through the compressed path.
+    print("[bangkv] fitting per-layer PQ codebooks on prefill keys ...")
+    n_layers = prefill_caches.k.shape[0]
+    cbs, codes = [], []
+    for l in range(n_layers):
+        kl = prefill_caches.k[l]
+        cb = bkv.fit_codebooks(kl, cfg.bangkv_m, iters=12)
+        cbs.append(cb)
+        codes.append(bkv.encode_keys(cb, kl))
+    codebooks = jnp.stack(cbs)
+    params = dict(params)
+    params["bangkv_codebooks"] = codebooks
+    bang_caches = bkv.BangKVCache(
+        codes=jnp.pad(jnp.stack(codes), ((0, 0), (0, 0), (0, s_max - S), (0, 0), (0, 0))),
+        k=exact_caches.k,
+        v=exact_caches.v,
+        index=jnp.full((n_layers,), S, jnp.int32),
+    )
+
+    step_exact = jax.jit(lambda p, c, t: lm.decode_step(p, c, t))
+    step_bang = jax.jit(lambda p, c, t: lm.decode_step(p, c, t, bangkv=True))
+
+    tok = tokens[:, -1:]
+    tok_b = tok
+    agree = 0
+    for s in range(args.decode_steps):
+        logits_e, exact_caches = step_exact(params, exact_caches, tok)
+        logits_b, bang_caches = step_bang(params, bang_caches, tok_b)
+        nxt_e = int(jnp.argmax(logits_e[0, 0]))
+        nxt_b = int(jnp.argmax(logits_b[0, 0]))
+        corr = float(np.corrcoef(
+            np.asarray(logits_e[0, 0], np.float32),
+            np.asarray(logits_b[0, 0], np.float32),
+        )[0, 1])
+        agree += nxt_e == nxt_b
+        print(
+            f"[bangkv] step {s}: exact->{nxt_e} bangkv->{nxt_b} "
+            f"logit corr={corr:.4f}"
+        )
+        tok = jnp.full((B, 1), nxt_e, jnp.int32)
+        tok_b = jnp.full((B, 1), nxt_b, jnp.int32)
+    print(f"[bangkv] argmax agreement: {agree}/{args.decode_steps}")
+    print(
+        "[bangkv] compressed-path bytes/key "
+        f"= {cfg.bangkv_m}B vs exact {2 * cfg.head_dim}B "
+        f"({2 * cfg.head_dim / cfg.bangkv_m:.0f}x smaller in-loop reads)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""End-to-end driver: batched ANN serving (the paper's workload).
+
+Simulates a query front-end: batches of queries arrive, the three-stage BANG
+pipeline answers them, and the server reports running QPS + recall. The
+`--variant base` mode keeps the graph behind a host callback -- the paper's
+CPU-side graph service; `--variant inmem`/`exact` are the §5 variants.
+
+    PYTHONPATH=src python examples/serve_ann.py --batches 5 --batch-size 128
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import BangIndex, SearchConfig, brute_force_knn, recall_at_k
+from repro.data import gaussian_mixture, uniform_queries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=6000)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--batches", type=int, default=5)
+    ap.add_argument("--batch-size", type=int, default=128)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--t", type=int, default=64)
+    ap.add_argument("--variant", default="inmem", choices=["base", "inmem", "exact"])
+    args = ap.parse_args()
+
+    print(f"[serve] building index over {args.n} x {args.dim} corpus ...")
+    data = gaussian_mixture(args.n, args.dim, n_clusters=48, seed=0)
+    index = BangIndex.build(data, m=16, R=24, L_build=48)
+    cfg = SearchConfig(t=args.t, bloom_z=16384)
+
+    total_q, total_s, recalls = 0, 0.0, []
+    for b in range(args.batches):
+        queries = uniform_queries(data, args.batch_size, seed=100 + b)
+        t0 = time.perf_counter()
+        ids, dists = index.search(queries, args.k, variant=args.variant, cfg=cfg)
+        dt = time.perf_counter() - t0
+        gt = brute_force_knn(data, queries, args.k)
+        r = recall_at_k(np.asarray(ids), gt)
+        recalls.append(r)
+        total_q += args.batch_size
+        total_s += dt
+        print(
+            f"[serve] batch {b}: {args.batch_size} queries in {dt*1e3:.0f}ms "
+            f"({args.batch_size/dt:.0f} QPS), recall@{args.k}={r:.3f}"
+        )
+    print(
+        f"[serve] TOTAL {total_q} queries, {total_q/total_s:.0f} QPS, "
+        f"mean recall={np.mean(recalls):.3f} (variant={args.variant})"
+    )
+
+
+if __name__ == "__main__":
+    main()

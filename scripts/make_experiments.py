@@ -1,0 +1,85 @@
+"""Generate EXPERIMENTS.md tables from dry-run/perf JSON caches."""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def load(d, mesh=None):
+    out = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        r = json.load(open(p))
+        if mesh and r.get("mesh") != mesh:
+            continue
+        out.append(r)
+    return out
+
+
+def roofline_table(recs):
+    lines = [
+        "| arch | shape | mesh | compute | memory | collective | dominant | useful-FLOP | comment |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAILED | | | | | |")
+            continue
+        rf = r["roofline"]
+        ratio = rf.get("useful_flop_ratio") or 0
+        comment = ""
+        if r.get("bangkv"):
+            comment = "BANG-KV"
+        elif r["shape"] == "long_500k":
+            comment = "SSM native"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {fmt_s(rf['compute_s'])} "
+            f"| {fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | {rf['dominant']} "
+            f"| {ratio:.2f} | {comment} |"
+        )
+    return "\n".join(lines)
+
+
+def dryrun_table(recs):
+    lines = [
+        "| arch | shape | mesh | compile | HLO flops/chip | collective bytes/chip | temp bytes |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAILED | | | |")
+            continue
+        cm = r.get("cost_model", {})
+        mem = r.get("full_program", {}).get("memory", {})
+        temp = mem.get("temp_size_in_bytes", 0)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r.get('compile_s','-')}s "
+            f"| {cm.get('flops',0):.2e} | {cm.get('collectives',{}).get('total_bytes',0):.2e} "
+            f"| {temp:.2e} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    base = load("experiments/dryrun")
+    print("## single-pod roofline\n")
+    print(roofline_table([r for r in base if r["mesh"] == "pod16x16"]))
+    print("\n## multi-pod roofline\n")
+    print(roofline_table([r for r in base if r["mesh"] == "pod2x16x16"]))
+    print("\n## dryrun\n")
+    print(dryrun_table(base))
+
+
+if __name__ == "__main__":
+    main()

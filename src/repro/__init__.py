@@ -1,0 +1,9 @@
+"""repro: BANG (billion-scale ANNS) reproduced as a multi-pod JAX framework.
+
+Public API surface:
+    repro.core.bang.BangIndex      -- the paper's three-stage ANNS pipeline
+    repro.configs                  -- assigned architecture configs
+    repro.launch                   -- mesh / dryrun / train / serve entrypoints
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,10 @@
+# BANG core: the paper's primary contribution.
+#   kmeans / pq        -- PQ codec + PQDistTable (stage 1)
+#   bloom              -- visited-set bloom filter (§4.4)
+#   vamana             -- Vamana graph construction substrate (DiskANN)
+#   worklist / search  -- Algorithm 2 batched greedy search (stage 2)
+#   rerank             -- exact-distance re-ranking (stage 3, §4.9)
+#   bang               -- BangIndex public API (three-stage pipeline)
+#   distributed        -- pod-scale sharded-graph search (shard_map)
+from .bang import BangIndex, brute_force_knn, recall_at_k  # noqa: F401
+from .search import SearchConfig  # noqa: F401

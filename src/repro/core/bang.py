@@ -1,0 +1,175 @@
+"""BangIndex: the paper's three-stage pipeline behind one public API.
+
+    Stage 1  Distance-table construction   (§4.2, Pallas pq_table kernel)
+    Stage 2  ANN search                    (§4.1-4.8, repro.core.search)
+    Stage 3  Re-ranking                    (§4.9, repro.core.rerank)
+
+Variants (paper §5):
+    "base"   graph + full vectors on host, PQ distances on device  (BANG Base)
+    "inmem"  everything on device, PQ distances + re-rank          (In-memory)
+    "exact"  everything on device, exact distances, no re-rank     (Exact-distance)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import pq as pqlib
+from . import rerank as rr
+from . import search as searchlib
+from .search import SearchConfig, SearchResult
+from .vamana import VamanaGraph, build_vamana
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class SearchStats:
+    n_iters: int
+    mean_hops: float
+    p95_hops: float
+    wall_s: float
+    qps: float
+
+
+@dataclasses.dataclass
+class BangIndex:
+    """An immutable ANNS index over a dataset (codec + codes + graph)."""
+
+    codec: pqlib.PQCodec
+    codes: Array                 # (n, m) uint8, device-resident (the 74 GB star)
+    graph: VamanaGraph           # host adjacency (base) / copied to device (inmem)
+    data_np: np.ndarray          # host full vectors (base re-rank source)
+    data_dev: Array | None = None  # device full vectors (inmem/exact variants)
+
+    # ------------------------------------------------------------------ build
+    @classmethod
+    def build(
+        cls,
+        data: np.ndarray,
+        *,
+        m: int = 16,
+        R: int = 32,
+        L_build: int = 64,
+        alpha: float = 1.2,
+        kmeans_iters: int = 12,
+        seed: int = 0,
+        keep_device_data: bool = True,
+        graph: VamanaGraph | None = None,
+    ) -> "BangIndex":
+        data = np.asarray(data, np.float32)
+        codec = pqlib.train_pq(jnp.asarray(data), m, iters=kmeans_iters)
+        codes = pqlib.pq_encode(codec, jnp.asarray(data))
+        if graph is None:
+            graph = build_vamana(data, R=R, L=L_build, alpha=alpha, seed=seed)
+        return cls(
+            codec=codec,
+            codes=codes,
+            graph=graph,
+            data_np=data,
+            data_dev=jnp.asarray(data) if keep_device_data else None,
+        )
+
+    @property
+    def n(self) -> int:
+        return self.codes.shape[0]
+
+    # ----------------------------------------------------------------- search
+    def search(
+        self,
+        queries: np.ndarray | Array,
+        k: int = 10,
+        *,
+        t: int = 64,
+        variant: str = "inmem",
+        rerank: bool = True,
+        cfg: SearchConfig | None = None,
+        return_stats: bool = False,
+    ) -> tuple[Array, Array] | tuple[Array, Array, SearchStats]:
+        """Batched k-NN search. Returns (ids (B, k), dists (B, k))."""
+        queries = jnp.asarray(queries, jnp.float32)
+        cfg = cfg or SearchConfig(t=max(t, k))
+        t0 = time.perf_counter()
+
+        if variant == "exact":
+            assert self.data_dev is not None, "exact variant needs device data"
+            adjacency = jnp.asarray(self.graph.adjacency)
+            res = searchlib.search_exact(
+                queries, self.data_dev, adjacency, self.graph.medoid, cfg
+            )
+            # Exact-distance variant skips the re-rank (§5.2): the worklist
+            # already holds exact distances.
+            ids = res.worklist.ids[:, :k]
+            dists = res.worklist.dists[:, :k]
+        else:
+            # Stage 1: PQDistTable, built once per batch, device-resident.
+            table = pqlib.build_dist_table(self.codec, queries)
+            if variant == "inmem":
+                adjacency = jnp.asarray(self.graph.adjacency)
+                res = searchlib.search_inmem(
+                    queries, table, self.codes, adjacency, self.graph.medoid, cfg
+                )
+            elif variant == "base":
+                res = searchlib.search_base(
+                    queries, table, self.codes, self.graph.adjacency,
+                    self.graph.medoid, cfg,
+                )
+            else:
+                raise ValueError(f"unknown variant {variant!r}")
+
+            if rerank:
+                # Stage 3: exact distances over every expanded candidate.
+                if variant == "base" or self.data_dev is None:
+                    ids, dists = rr.rerank(
+                        queries, res.history_ids, k, data_np=self.data_np,
+                        use_kernels=cfg.use_kernels,
+                    )
+                else:
+                    ids, dists = rr.rerank(
+                        queries, res.history_ids, k, data=self.data_dev,
+                        use_kernels=cfg.use_kernels,
+                    )
+            else:
+                ids = res.worklist.ids[:, :k]
+                dists = res.worklist.dists[:, :k]
+
+        ids = jax.block_until_ready(ids)
+        wall = time.perf_counter() - t0
+        if not return_stats:
+            return ids, dists
+        hops = np.asarray(res.n_hops)
+        stats = SearchStats(
+            n_iters=int(res.n_iters),
+            mean_hops=float(hops.mean()),
+            p95_hops=float(np.percentile(hops, 95)),
+            wall_s=wall,
+            qps=queries.shape[0] / wall,
+        )
+        return ids, dists, stats
+
+
+def brute_force_knn(data: np.ndarray, queries: np.ndarray, k: int) -> np.ndarray:
+    """Ground truth for recall measurements (O(nd) per query)."""
+    data = jnp.asarray(data, jnp.float32)
+    queries = jnp.asarray(queries, jnp.float32)
+    d2 = (
+        jnp.sum(queries * queries, -1)[:, None]
+        + jnp.sum(data * data, -1)[None, :]
+        - 2.0 * queries @ data.T
+    )
+    _, idx = jax.lax.top_k(-d2, k)
+    return np.asarray(idx)
+
+
+def recall_at_k(found_ids: np.ndarray, true_ids: np.ndarray) -> float:
+    """k-recall@k (paper §6.3): |found ∩ true| / k averaged over queries."""
+    k = true_ids.shape[1]
+    hits = 0
+    for f, t in zip(np.asarray(found_ids), true_ids):
+        hits += len(set(f.tolist()) & set(t.tolist()))
+    return hits / (true_ids.shape[0] * k)

@@ -1,0 +1,187 @@
+"""Pod-scale BANG: the sharded-graph search (DESIGN.md §2, §6).
+
+The paper keeps the graph + full vectors in host RAM (far memory) and the PQ
+codes in GPU HBM (near memory), moving only O(frontier) bytes per hop over
+PCIe. At pod scale the same split maps onto the TPU memory hierarchy: the
+graph, codes, and full vectors are *sharded over the `model` mesh axis* (a
+260 GB graph is ~0.5 GB/chip on 512 chips), queries are sharded over
+(`pod`, `data`), and each hop exchanges only the frontier:
+
+    neighbour fetch   : owner-shard gather + psum(model)    -- (B_loc, R) int32
+    ADC distances     : owner-shard ADC     + psum(model)   -- (B_loc, R) f32
+    worklist / bloom  : replicated per model shard (tiny, zero comms)
+    re-rank           : owner-shard partial exact-L2 + psum
+
+Each valid node id is owned by exactly one shard (contiguous row sharding),
+so a masked psum reconstructs the full row exchange -- the ragged all-to-all
+of the paper's CPU service, expressed as a dense collective XLA can schedule
+and overlap. The distance psum sends R floats per query per hop instead of
+R·m code bytes: computing ADC *at the owner* is the pod-scale analogue of
+"send only the bare minimum over the link" (§4.3).
+
+These functions are designed to run INSIDE jax.shard_map; `bang_search` is
+reused unchanged with sharded neighbour/distance callbacks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import pq as pqlib
+from .search import SearchConfig, SearchResult, bang_search
+from .worklist import INVALID_ID
+
+Array = jax.Array
+
+
+def _owned(local_n: int, ids: Array, axis: str) -> tuple[Array, Array]:
+    """(relative ids, ownership mask) for globally-sharded contiguous rows."""
+    shard = jax.lax.axis_index(axis)
+    lo = shard.astype(jnp.int32) * local_n
+    rel = ids - lo
+    own = (rel >= 0) & (rel < local_n) & (ids != INVALID_ID) & (ids >= 0)
+    return jnp.clip(rel, 0, local_n - 1), own
+
+
+def sharded_neighbor_fn(adjacency_local: Array, axis: str = "model"):
+    """Frontier adjacency fetch: owner gather + psum (Algorithm 2 line 5/6)."""
+    n_loc, R = adjacency_local.shape
+
+    def fn(u: Array) -> Array:
+        rel, own = _owned(n_loc, u, axis)
+        rows = adjacency_local[rel]                       # (B, R)
+        # Shift by +1 so "0" is the neutral element of the psum (pad = -1).
+        contrib = jnp.where(own[:, None], rows + 1, 0)
+        summed = jax.lax.psum(contrib, axis)
+        return summed - 1
+
+    return fn
+
+
+def sharded_adc_distance_fn(
+    table: Array, codes_local: Array, axis: str = "model", use_kernels: bool = False
+):
+    """Owner-computed ADC distances + psum (§4.5 at pod scale).
+
+    table: (B, m, 256) replicated over `axis`; codes_local: (n_loc, m).
+    """
+    n_loc = codes_local.shape[0]
+
+    def fn(ids: Array, valid: Array) -> Array:
+        rel, own = _owned(n_loc, ids, axis)
+        gathered = codes_local[rel]                       # (B, R, m)
+        if use_kernels:
+            from repro.kernels.pq_adc import ops as adc_ops
+
+            d = adc_ops.adc(table, gathered, own)
+        else:
+            d = pqlib.adc_distance(table, gathered)
+        d = jnp.where(own & valid, d, 0.0)
+        d = jax.lax.psum(d, axis)
+        return jnp.where(valid, d, jnp.inf)
+
+    return fn
+
+
+def sharded_exact_dists(
+    queries: Array, data_local: Array, ids: Array, axis: str = "model"
+) -> Array:
+    """Owner-computed exact squared L2 + psum (re-rank stage, §4.9)."""
+    n_loc = data_local.shape[0]
+    rel, own = _owned(n_loc, ids, axis)
+    vecs = data_local[rel].astype(jnp.float32)            # (B, C, d)
+    q = queries.astype(jnp.float32)
+    d2 = (
+        jnp.sum(q * q, -1)[:, None]
+        + jnp.sum(vecs * vecs, -1)
+        - 2.0 * jnp.einsum("bcd,bd->bc", vecs, q)
+    )
+    d2 = jnp.where(own, d2, 0.0)
+    d2 = jax.lax.psum(d2, axis)
+    return jnp.where(ids == INVALID_ID, jnp.inf, d2)
+
+
+def sharded_bang_search_block(
+    queries: Array,          # (B_loc, d)      sharded over data axes
+    table: Array,            # (B_loc, m, 256) sharded over data axes
+    codes_local: Array,      # (n_loc, m)      sharded over model axis
+    adjacency_local: Array,  # (n_loc, R)      sharded over model axis
+    data_local: Array,       # (n_loc, d)      sharded over model axis
+    medoid: int,
+    k: int,
+    cfg: SearchConfig,
+    axis: str = "model",
+) -> tuple[Array, Array]:
+    """The per-shard body: full BANG pipeline on sharded state.
+
+    Returns (ids (B_loc, k), dists (B_loc, k)) -- replicated over `axis`.
+    """
+    res: SearchResult = bang_search(
+        queries,
+        neighbor_fn=sharded_neighbor_fn(adjacency_local, axis),
+        distance_fn=sharded_adc_distance_fn(table, codes_local, axis, cfg.use_kernels),
+        medoid=medoid,
+        n_points=codes_local.shape[0],  # local; only used for sizing hints
+        cfg=cfg,
+    )
+    d2 = sharded_exact_dists(queries, data_local, res.history_ids, axis)
+    neg_top, pos = jax.lax.top_k(-d2, k)
+    ids = jnp.take_along_axis(res.history_ids, pos, axis=-1)
+    return ids, -neg_top
+
+
+def make_sharded_search(
+    mesh: Mesh,
+    medoid: int,
+    k: int,
+    cfg: SearchConfig,
+    *,
+    data_axes: Sequence[str] = ("data",),
+    model_axis: str = "model",
+):
+    """Build the jitted pod-scale search fn over `mesh`.
+
+    Input shardings:  queries (B, d)   P(data_axes, None)
+                      codes   (n, m)   P(model_axis, None)
+                      adjacency (n, R) P(model_axis, None)
+                      data    (n, d)   P(model_axis, None)
+                      codebooks        replicated
+    Output:           ids/dists (B, k) P(data_axes, None)
+    """
+    dspec = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+
+    def fn(queries, codebooks, codes, adjacency, data):
+        table = pqlib.build_dist_table(pqlib.PQCodec(codebooks), queries)
+        return sharded_bang_search_block(
+            queries, table, codes, adjacency, data, medoid, k, cfg, model_axis
+        )
+
+    sharded = jax.shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(
+            P(dspec, None),          # queries
+            P(),                     # codebooks (replicated)
+            P(model_axis, None),     # codes
+            P(model_axis, None),     # adjacency
+            P(model_axis, None),     # data
+        ),
+        out_specs=(P(dspec, None), P(dspec, None)),
+        check_vma=False,
+    )
+    return jax.jit(sharded)
+
+
+def pad_to_multiple(x, multiple: int, fill):
+    """Pad axis-0 so row-sharding divides evenly; fill must be search-neutral."""
+    import numpy as np
+
+    n = x.shape[0]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x
+    return np.concatenate([x, np.full((pad, *x.shape[1:]), fill, x.dtype)], 0)

@@ -1,0 +1,323 @@
+"""BANG batched greedy search -- Algorithm 2 of the paper.
+
+One query per "CUDA thread block" becomes one query per batch lane: the whole
+batch advances in lock-step iterations of a `lax.while_loop`, with a
+convergence mask standing in for per-block exit (justified by the paper's
+Fig 10: 95% of queries finish within 1.1·L iterations, so lock-step wastes
+little work). Each iteration performs exactly the paper's stages:
+
+    fetch neighbours of u*        (CPU in BANG Base; device gather in-memory)
+    bloom-filter visited           (§4.4)
+    PQ asymmetric distances        (§4.5; Pallas kernel on TPU)
+    sort neighbours                (§4.7; bitonic kernel)
+    merge into worklist 𝓛          (§4.8; merge-path)
+    select next candidate u*       (§4.6 eager selection overlaps the fetch
+                                    with sort+merge -- realised here as
+                                    software pipelining: the loop state carries
+                                    the *pre-selected* candidate, so XLA can
+                                    schedule its gather before/alongside the
+                                    merge of the previous iteration)
+
+Variants (paper §5):
+    base          graph + full vectors on the host (pure_callback adjacency
+                  service == the paper's CPU-side neighbour fetch over PCIe)
+    inmem         graph on device, PQ distances (BANG In-memory)
+    exact         graph + data on device, exact L2 distances, no re-ranking
+                  (BANG Exact-distance)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bloom as bloomlib
+from . import pq as pqlib
+from .worklist import (
+    INVALID_ID,
+    Worklist,
+    first_unvisited,
+    mark_visited,
+    merge_worklist,
+    sort_candidates,
+    worklist_init,
+)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    t: int = 64                  # worklist size (paper's search parameter t/L)
+    max_iters: int = 0           # 0 -> ceil(1.5*t)+8 (Fig 10 headroom)
+    bloom_z: int = 399887        # paper §6.3 default
+    eager: bool = True           # §4.6 eager candidate selection
+    use_kernels: bool = False    # Pallas fast paths (TPU / interpret)
+
+    def iters(self) -> int:
+        return self.max_iters if self.max_iters > 0 else int(1.5 * self.t) + 8
+
+
+class SearchResult(NamedTuple):
+    worklist: Worklist      # final 𝓛 (B, t), sorted
+    history_ids: Array      # (B, C) every expanded candidate, INVALID padded
+    history_len: Array      # (B,) number of expanded candidates
+    n_iters: Array          # () total lock-step iterations executed
+    n_hops: Array           # (B,) per-query expansions (== history_len)
+
+
+class _State(NamedTuple):
+    wl: Worklist
+    filt: Array             # bloom filter (B, z)
+    hist_ids: Array         # (B, C)
+    hist_len: Array         # (B,)
+    u: Array                # (B,) pending candidate (eagerly selected)
+    active: Array           # (B,) not yet converged
+    it: Array               # ()
+
+
+NeighborFn = Callable[[Array], Array]     # (B,) ids -> (B, R) neighbour ids
+DistanceFn = Callable[[Array, Array], Array]  # ids (B,R), valid -> dists (B,R)
+
+
+def _adc_distance_fn(table: Array, codes: Array, use_kernels: bool) -> DistanceFn:
+    """PQ asymmetric distances for candidate ids (paper §4.5)."""
+
+    def fn(ids: Array, valid: Array) -> Array:
+        safe = jnp.where(valid, ids, 0)
+        gathered = codes[safe]                        # (B, R, m) uint8
+        if use_kernels:
+            from repro.kernels.pq_adc import ops as adc_ops
+
+            d = adc_ops.adc(table, gathered, valid)
+        else:
+            d = pqlib.adc_distance(table, gathered)
+        return jnp.where(valid, d, jnp.inf)
+
+    return fn
+
+
+def _exact_distance_fn(data: Array, queries: Array) -> DistanceFn:
+    """Exact squared-L2 distances (BANG Exact-distance variant, §5.2)."""
+    qn = jnp.sum(queries * queries, axis=-1)          # (B,)
+
+    def fn(ids: Array, valid: Array) -> Array:
+        safe = jnp.where(valid, ids, 0)
+        vecs = data[safe].astype(jnp.float32)         # (B, R, d)
+        vn = jnp.sum(vecs * vecs, axis=-1)            # (B, R)
+        dot = jnp.einsum("brd,bd->br", vecs, queries.astype(jnp.float32))
+        d = qn[:, None] + vn - 2.0 * dot
+        return jnp.where(valid, d, jnp.inf)
+
+    return fn
+
+
+def device_neighbor_fn(adjacency: Array) -> NeighborFn:
+    """In-memory variant: adjacency rows gathered from device HBM."""
+
+    def fn(u: Array) -> Array:
+        safe = jnp.where(u == INVALID_ID, 0, u)
+        nbrs = adjacency[safe]
+        return jnp.where((u == INVALID_ID)[:, None], -1, nbrs)
+
+    return fn
+
+
+def host_neighbor_fn(adjacency_np: np.ndarray) -> NeighborFn:
+    """BANG Base: the graph lives in host RAM; each hop crosses the link.
+
+    jax.pure_callback is the JAX-native analogue of the paper's CPU-side
+    neighbour service: the device ships the (B,) frontier ids out, the host
+    gathers adjacency rows, and ships (B, R) ids back -- exactly the Algorithm
+    2 line 5/6 traffic, and nothing else.
+    """
+    R = adjacency_np.shape[1]
+
+    def host_gather(u: np.ndarray) -> np.ndarray:
+        safe = np.where(u == np.int32(2**31 - 1), 0, u)
+        out = adjacency_np[safe]
+        out[u == np.int32(2**31 - 1)] = -1
+        return out.astype(np.int32)
+
+    def fn(u: Array) -> Array:
+        shape = jax.ShapeDtypeStruct((u.shape[0], R), jnp.int32)
+        return jax.pure_callback(host_gather, shape, u, vmap_method="sequential")
+
+    return fn
+
+
+def _sort_cands(d: Array, i: Array, use_kernels: bool) -> tuple[Array, Array]:
+    if use_kernels:
+        from repro.kernels.bitonic import ops as bitonic_ops
+
+        return bitonic_ops.sort_kv(d, i)
+    return sort_candidates(d, i)
+
+
+def _merge(wl: Worklist, d: Array, i: Array, use_kernels: bool) -> Worklist:
+    if use_kernels:
+        from repro.kernels.bitonic import ops as bitonic_ops
+
+        return bitonic_ops.merge_worklist(wl, d, i)
+    return merge_worklist(wl, d, i)
+
+
+def bang_search(
+    queries: Array,
+    *,
+    neighbor_fn: NeighborFn,
+    distance_fn: DistanceFn,
+    medoid: int,
+    n_points: int,
+    cfg: SearchConfig,
+) -> SearchResult:
+    """Run Algorithm 2 for a batch of queries. Pure function of its inputs."""
+    B = queries.shape[0]
+    t, C = cfg.t, cfg.iters()
+
+    # --- Initialisation: 𝓛 = {medoid}, bloom = {medoid} (Algorithm 2 line 2).
+    med = jnp.full((B,), medoid, jnp.int32)
+    med_valid = jnp.ones((B, 1), jnp.bool_)
+    med_d = distance_fn(med[:, None], med_valid)[:, 0]          # (B,)
+    wl0 = worklist_init(B, t)
+    wl0 = Worklist(
+        dists=wl0.dists.at[:, 0].set(med_d),
+        ids=wl0.ids.at[:, 0].set(med),
+        visited=wl0.visited.at[:, 0].set(True),   # medoid is the first expansion
+    )
+    filt0 = bloomlib.bloom_set(bloomlib.bloom_init(B, cfg.bloom_z), med[:, None])
+    hist0 = jnp.full((B, C), INVALID_ID, jnp.int32).at[:, 0].set(med)
+    state = _State(
+        wl=wl0,
+        filt=filt0,
+        hist_ids=hist0,
+        hist_len=jnp.ones((B,), jnp.int32),
+        u=med,
+        active=jnp.ones((B,), jnp.bool_),
+        it=jnp.zeros((), jnp.int32),
+    )
+
+    def cond(s: _State) -> Array:
+        return jnp.any(s.active) & (s.it < C - 1)
+
+    def body(s: _State) -> _State:
+        # 1. Fetch neighbours of the pending candidate (host or device). This
+        #    is the op the eager selection (§4.6) exists to overlap: u was
+        #    chosen in the previous iteration *before* that iteration's merge,
+        #    so this gather has no data dependency on the previous merge.
+        nbrs = neighbor_fn(s.u)                                   # (B, R)
+        valid = (nbrs >= 0) & s.active[:, None]
+
+        # 2. Bloom filter: drop already-seen neighbours, insert fresh ones.
+        fresh, filt = bloomlib.bloom_query_and_set(s.filt, nbrs, valid)
+
+        # 3. PQ (or exact) distances for fresh neighbours.
+        d = distance_fn(nbrs, fresh)
+        cand_ids = jnp.where(fresh, nbrs, INVALID_ID)
+
+        # 4. Sort the candidate list (parallel merge sort / bitonic kernel).
+        sd, si = _sort_cands(d, cand_ids, cfg.use_kernels)
+
+        # 5. Candidate selection. Eager (§4.6): best of {first unvisited in
+        #    the *pre-merge* worklist, nearest fresh neighbour} -- computable
+        #    before the merge. Lazy: first unvisited of the merged worklist.
+        if cfg.eager:
+            wl_u, wl_found = first_unvisited(s.wl)
+            wl_d = jnp.where(
+                wl_found,
+                jnp.min(jnp.where(s.wl.visited, jnp.inf, s.wl.dists), axis=-1),
+                jnp.inf,
+            )
+            cand_best_d, cand_best_i = sd[:, 0], si[:, 0]
+            take_cand = cand_best_d < wl_d
+            u_next = jnp.where(take_cand, cand_best_i, wl_u)
+            found = wl_found | (cand_best_i != INVALID_ID)
+            wl = _merge(s.wl, sd, si, cfg.use_kernels)
+        else:
+            wl = _merge(s.wl, sd, si, cfg.use_kernels)
+            u_next, found = first_unvisited(wl)
+
+        active = s.active & found
+        u_next = jnp.where(active, u_next, INVALID_ID)
+        wl = mark_visited(wl, u_next)
+
+        # 6. Record the expansion for re-ranking (paper: every candidate sent
+        #    to the CPU is retained for the final re-rank).
+        b_idx = jnp.arange(B, dtype=jnp.int32)
+        pos = jnp.minimum(s.hist_len, C - 1)
+        hist = s.hist_ids.at[b_idx, pos].set(
+            jnp.where(active, u_next, s.hist_ids[b_idx, pos])
+        )
+        hist_len = s.hist_len + active.astype(jnp.int32)
+
+        return _State(wl, filt, hist, hist_len, u_next, active, s.it + 1)
+
+    final = jax.lax.while_loop(cond, body, state)
+    return SearchResult(
+        worklist=final.wl,
+        history_ids=final.hist_ids,
+        history_len=final.hist_len,
+        n_iters=final.it,
+        n_hops=final.hist_len,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Convenience wrappers binding the three variants.
+# ---------------------------------------------------------------------------
+
+def search_inmem(
+    queries: Array,
+    table: Array,
+    codes: Array,
+    adjacency: Array,
+    medoid: int,
+    cfg: SearchConfig,
+) -> SearchResult:
+    return bang_search(
+        queries,
+        neighbor_fn=device_neighbor_fn(adjacency),
+        distance_fn=_adc_distance_fn(table, codes, cfg.use_kernels),
+        medoid=medoid,
+        n_points=codes.shape[0],
+        cfg=cfg,
+    )
+
+
+def search_base(
+    queries: Array,
+    table: Array,
+    codes: Array,
+    adjacency_np: np.ndarray,
+    medoid: int,
+    cfg: SearchConfig,
+) -> SearchResult:
+    return bang_search(
+        queries,
+        neighbor_fn=host_neighbor_fn(adjacency_np),
+        distance_fn=_adc_distance_fn(table, codes, cfg.use_kernels),
+        medoid=medoid,
+        n_points=codes.shape[0],
+        cfg=cfg,
+    )
+
+
+def search_exact(
+    queries: Array,
+    data: Array,
+    adjacency: Array,
+    medoid: int,
+    cfg: SearchConfig,
+) -> SearchResult:
+    return bang_search(
+        queries,
+        neighbor_fn=device_neighbor_fn(adjacency),
+        distance_fn=_exact_distance_fn(data, queries.astype(jnp.float32)),
+        medoid=medoid,
+        n_points=data.shape[0],
+        cfg=cfg,
+    )

@@ -1,0 +1,203 @@
+"""Vamana graph construction (DiskANN [26]; paper §2.2).
+
+BANG searches a pre-built Vamana graph -- the paper reuses DiskANN's index and
+does not build one. A self-contained framework must, so this module implements
+the Vamana construction algorithm: iterative insertion with GreedySearch to
+collect a visited set and RobustPrune (the α-pruning rule) to select out-
+neighbours, plus reverse-edge patching. Defaults follow the paper's build
+parameters (R=64, L=200, α=1.2) scaled down by callers for test datasets.
+
+Construction is a host-side (numpy) procedure -- it is offline and sequential
+by nature; the accelerator-side contribution of the paper is the *search*,
+which lives in repro.core.search. Batched distance math inside the build is
+vectorised numpy.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class VamanaGraph:
+    """Fixed-degree adjacency: (n, R) int32, -1 padded. medoid = search entry."""
+
+    adjacency: np.ndarray
+    medoid: int
+
+    @property
+    def n(self) -> int:
+        return self.adjacency.shape[0]
+
+    @property
+    def R(self) -> int:
+        return self.adjacency.shape[1]
+
+    def degree_stats(self) -> tuple[float, int]:
+        deg = (self.adjacency >= 0).sum(1)
+        return float(deg.mean()), int(deg.max())
+
+
+def _dists_to(data: np.ndarray, ids: np.ndarray, x: np.ndarray) -> np.ndarray:
+    diff = data[ids] - x[None, :]
+    return np.einsum("nd,nd->n", diff, diff)
+
+
+def find_medoid(data: np.ndarray) -> int:
+    centroid = data.mean(axis=0)
+    return int(np.argmin(np.einsum("nd,nd->n", data - centroid, data - centroid)))
+
+
+def _greedy_search_build(
+    data: np.ndarray,
+    adjacency: np.ndarray,
+    start: int,
+    query: np.ndarray,
+    L: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """GreedySearch(s, q, L) during build. Returns (visited_ids, visited_dists).
+
+    Standard best-first beam: expand the closest unvisited worklist entry,
+    until every worklist entry is visited. Mirrors Algorithm 1 of the paper.
+    """
+    wl_ids = np.array([start], np.int32)
+    wl_d = _dists_to(data, wl_ids, query)
+    visited: dict[int, float] = {}
+    in_wl = {int(start)}
+    while True:
+        unvis = [i for i, nid in enumerate(wl_ids) if int(nid) not in visited]
+        if not unvis:
+            break
+        u_pos = unvis[int(np.argmin(wl_d[unvis]))]
+        u = int(wl_ids[u_pos])
+        visited[u] = float(wl_d[u_pos])
+        nbrs = adjacency[u]
+        nbrs = nbrs[nbrs >= 0]
+        fresh = np.array([b for b in nbrs if int(b) not in in_wl and int(b) not in visited], np.int32)
+        if fresh.size:
+            fd = _dists_to(data, fresh, query)
+            wl_ids = np.concatenate([wl_ids, fresh])
+            wl_d = np.concatenate([wl_d, fd])
+            in_wl.update(int(b) for b in fresh)
+            if wl_ids.size > L:
+                keep = np.argsort(wl_d, kind="stable")[:L]
+                dropped = set(map(int, wl_ids)) - set(map(int, wl_ids[keep]))
+                in_wl -= {x for x in dropped if x not in visited}
+                wl_ids, wl_d = wl_ids[keep], wl_d[keep]
+    ids = np.fromiter(visited.keys(), np.int32, len(visited))
+    ds = np.fromiter(visited.values(), np.float32, len(visited))
+    return ids, ds
+
+
+def robust_prune(
+    data: np.ndarray,
+    p: int,
+    cand_ids: np.ndarray,
+    cand_dists: np.ndarray,
+    alpha: float,
+    R: int,
+) -> np.ndarray:
+    """RobustPrune(p, V, α, R) (DiskANN Algorithm 2).
+
+    Greedily keep the closest candidate p*, then discard every remaining
+    candidate x with α·d(p*, x) <= d(p, x) -- the α-rule that creates the
+    long-range edges BANG's search relies on (paper §2.2, §4.4).
+    """
+    mask = cand_ids != p
+    cand_ids, cand_dists = cand_ids[mask], cand_dists[mask]
+    cand_ids, uniq = np.unique(cand_ids, return_index=True)
+    cand_dists = cand_dists[uniq]
+    order = np.argsort(cand_dists, kind="stable")
+    cand_ids, cand_dists = cand_ids[order], cand_dists[order]
+
+    result = np.empty(R, np.int32)
+    count = 0
+    while cand_ids.size and count < R:
+        p_star = int(cand_ids[0])
+        result[count] = p_star
+        count += 1
+        if cand_ids.size == 1:
+            break
+        rest_ids, rest_d = cand_ids[1:], cand_dists[1:]
+        diff = data[rest_ids] - data[p_star][None, :]
+        d_star = np.einsum("nd,nd->n", diff, diff)
+        # distances are squared L2 throughout; the α rule in squared space
+        # uses α² to stay equivalent to DiskANN's metric-space formulation.
+        keep = (alpha * alpha) * d_star > rest_d
+        cand_ids, cand_dists = rest_ids[keep], rest_d[keep]
+    return result[:count]
+
+
+def build_vamana(
+    data: np.ndarray,
+    R: int = 32,
+    L: int = 64,
+    alpha: float = 1.2,
+    *,
+    seed: int = 0,
+    two_pass: bool = True,
+) -> VamanaGraph:
+    """Construct a Vamana graph over (n, d) float data.
+
+    Follows DiskANN: random-regular init, then one pass with α=1 and one with
+    the target α (two_pass), inserting points in random order; each insertion
+    runs GreedySearch from the medoid, RobustPrunes the visited set into the
+    point's out-list, and patches reverse edges (pruning overfull nodes).
+    """
+    data = np.asarray(data, np.float32)
+    n = data.shape[0]
+    rng = np.random.default_rng(seed)
+    R = min(R, n - 1)
+
+    # Random R-regular initial out-edges (no self-loops).
+    adjacency = np.full((n, R), -1, np.int32)
+    init = rng.integers(0, n - 1, size=(n, R))
+    init = init + (init >= np.arange(n)[:, None])  # skip self
+    adjacency[:, :] = init.astype(np.int32)
+
+    med = find_medoid(data)
+
+    passes = [1.0, alpha] if two_pass else [alpha]
+    for a in passes:
+        for p in rng.permutation(n):
+            p = int(p)
+            vis_ids, vis_d = _greedy_search_build(data, adjacency, med, data[p], L)
+            own = adjacency[p]
+            own = own[own >= 0]
+            if own.size:
+                own_d = _dists_to(data, own, data[p])
+                vis_ids = np.concatenate([vis_ids, own])
+                vis_d = np.concatenate([vis_d, own_d])
+            pruned = robust_prune(data, p, vis_ids, vis_d, a, R)
+            adjacency[p, :] = -1
+            adjacency[p, : pruned.size] = pruned
+            # Reverse edges: b -> p for every new neighbour b.
+            for b in pruned:
+                b = int(b)
+                row = adjacency[b]
+                if p in row:
+                    continue
+                slot = np.argmax(row < 0) if (row < 0).any() else -1
+                if slot >= 0 and row[slot] < 0:
+                    adjacency[b, slot] = p
+                else:
+                    cand = np.concatenate([row, [p]]).astype(np.int32)
+                    cd = _dists_to(data, cand, data[b])
+                    newrow = robust_prune(data, b, cand, cd, a, R)
+                    adjacency[b, :] = -1
+                    adjacency[b, : newrow.size] = newrow
+
+    return VamanaGraph(adjacency=adjacency, medoid=med)
+
+
+def build_fully_connected(n: int) -> VamanaGraph:
+    """Degenerate complete graph -- search on it must be exhaustive-exact.
+
+    Used by property tests: Exact-distance BANG on a complete graph with
+    t >= n has recall 1 by construction.
+    """
+    adj = np.tile(np.arange(n, dtype=np.int32)[None, :], (n, 1))
+    # drop self-loop by shifting each row
+    adj = np.stack([np.roll(adj[i], -i - 1)[: n - 1] for i in range(n)])
+    return VamanaGraph(adjacency=adj, medoid=0)

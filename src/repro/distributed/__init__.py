@@ -1,0 +1,6 @@
+from .partitioning import (  # noqa: F401
+    batch_pspec,
+    cache_pspecs,
+    make_shardings,
+    param_pspecs,
+)

@@ -1,0 +1,195 @@
+"""Sharding rules: parameter/batch/cache PartitionSpecs over the pod mesh.
+
+Strategy (DESIGN.md §6):
+  * 2D param sharding -- FSDP over `data` x TP over `model`; `pod` is pure DP
+    (params replicated across pods, gradients all-reduced once per step).
+  * MoE experts shard over `model` (expert parallelism).
+  * Decode KV caches shard sequence over `model` (context parallelism) and
+    batch over (`pod`, `data`).
+  * Anything whose dim does not divide the axis size falls back to
+    replication on that axis (granite's vocab=49155 is deliberately odd).
+
+Rules key off the *leaf name* (and "moe"/"shared" path hints), with role
+strings: "D" -> data axis, "M" -> model axis, "E" -> model axis (experts),
+None -> replicated. Stacked-layer leading dims get None prepended
+automatically (rule arity vs actual ndim).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# leaf-name -> dim roles (innermost `len(rule)` dims)
+_RULES: dict[str, tuple] = {
+    "embed": ("M", "D"),          # (V, D): vocab over model, d_model over data
+    "lm_head": ("D", "M"),        # (D, V)
+    "wq": ("D", "M"),
+    "wk": ("D", "M"),
+    "wv": ("D", "M"),
+    "wo": ("M", "D"),
+    "w_gate": ("D", "M"),
+    "w_up": ("D", "M"),
+    "w_down": ("M", "D"),
+    "router": ("D", None),
+    "in_proj": ("D", "M"),
+    "out_proj": ("M", "D"),
+    "conv_w": (None, "M"),
+    "conv_b": ("M",),
+    "A_log": ("M",),
+    "D": ("M",),
+    "dt_bias": ("M",),
+    "norm_w": ("M",),
+    "w": (None,),
+    "b": (None,),
+    "bangkv_codebooks": (None, None, None, None),
+}
+
+_MOE_RULES: dict[str, tuple] = {
+    "w_gate": ("E", "D", None),   # (E, D, F)
+    "w_up": ("E", "D", None),
+    "w_down": ("E", None, "D"),   # (E, F, D)
+}
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _role_axis(role, mesh: Mesh, data_axis: str, model_axis: str):
+    if role is None:
+        return None
+    return {"D": data_axis, "M": model_axis, "E": model_axis}[role]
+
+
+def _key_str(p) -> str:
+    for attr in ("key", "idx", "name"):  # DictKey / SequenceKey / GetAttrKey
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
+
+def _spec_for(path: tuple, leaf, mesh: Mesh, data_axis: str, model_axis: str) -> P:
+    names = [_key_str(p) for p in path]
+    name = names[-1]
+    in_moe = "moe" in names and "shared" not in names
+    rule = _MOE_RULES.get(name) if in_moe else None
+    if rule is None:
+        rule = _RULES.get(name)
+    if rule is None:
+        return P()
+    ndim = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+    pad = ndim - len(rule)
+    if pad < 0:  # rule longer than leaf (e.g. scalar) -> replicate
+        return P()
+    axes = []
+    shape = leaf.shape
+    for i, role in enumerate(rule):
+        ax = _role_axis(role, mesh, data_axis, model_axis)
+        dim = shape[pad + i]
+        if ax is not None and dim % _axis_size(mesh, ax) != 0:
+            ax = None  # uneven -> replicate on this axis
+        axes.append(ax)
+    return P(*([None] * pad + axes))
+
+
+def param_pspecs(params: Any, mesh: Mesh, *, data_axis: str = "data",
+                 model_axis: str = "model") -> Any:
+    """PartitionSpec pytree for a param (or optimizer-state) tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [
+        _spec_for(path, leaf, mesh, data_axis, model_axis) for path, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_pspec(mesh: Mesh) -> P:
+    """(B, ...) batch arrays: batch over every DP axis present."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return P(dp if len(dp) > 1 else (dp[0] if dp else None))
+
+
+def cache_pspecs(cache: Any, mesh: Mesh, *, batch_divisible: bool,
+                 model_axis: str = "model") -> Any:
+    """Decode-cache specs: batch over DP (if divisible), sequence over model.
+
+    Applies to KVCache/BangKVCache (k/v/codes: (L, B, S, H, ...)) and SSM
+    caches (conv (L,B,K,ch), state (L,B,H,P,N)).
+    """
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    bspec = dp_spec if batch_divisible else None
+    msize = _axis_size(mesh, model_axis)
+
+    def spec(path, leaf):
+        names = [_key_str(p) for p in path]
+        name = names[-1]
+        if name in ("k", "v", "codes"):          # (L, B, S, H, hd|m)
+            s = leaf.shape[2]
+            return P(None, bspec, model_axis if s % msize == 0 else None, None, None)
+        if name == "index":
+            return P()
+        if name == "conv":                        # (L, B, K-1, ch)
+            ch = leaf.shape[3]
+            return P(None, bspec, None, model_axis if ch % msize == 0 else None)
+        if name == "state":                       # (L, B, H, P, N)
+            h = leaf.shape[2]
+            return P(None, bspec, model_axis if h % msize == 0 else None, None, None)
+        if getattr(leaf, "ndim", 0) == 5:         # unnamed (L,B,M,H,hd): enc-dec cross K/V
+            return P(None, bspec, None, None, None)
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec(p, l) for p, l in flat]
+    )
+
+
+def make_shardings(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def constrain(x, *spec_entries):
+    """with_sharding_constraint that degrades to a no-op off-mesh.
+
+    Each entry is an axis name, a tuple of axis names, or None. Axis names
+    not present in the ambient mesh are dropped (single-device tests see a
+    no-op; the dry-run mesh sees the full constraint). Dims that do not
+    divide the axis size are released to replication.
+    """
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        axis_names = set(mesh.axis_names) if mesh is not None else set()
+    except Exception:  # noqa: BLE001
+        axis_names = set()
+    if not axis_names:
+        return x
+
+    def filt(entry, dim):
+        if entry is None:
+            return None
+        names = entry if isinstance(entry, tuple) else (entry,)
+        names = tuple(n for n in names if n in axis_names)
+        if not names:
+            return None
+        total = 1
+        for n in names:
+            total *= mesh.shape[n]
+        if dim % total:
+            return None
+        return names if len(names) > 1 else names[0]
+
+    entries = [filt(e, d) for e, d in zip(spec_entries, x.shape)]
+    entries += [None] * (x.ndim - len(entries))
+    if all(e is None for e in entries):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*entries))
+
+
+DP_AXES = ("pod", "data")   # batch axes, in mesh order
+TP_AXIS = "model"

@@ -1,0 +1,1 @@
+# Bitonic sort + merge-path worklist merge kernels (paper §4.7-§4.8).

@@ -1,0 +1,193 @@
+"""Pallas TPU kernels: bitonic sort + worklist merge (paper §4.7-§4.8).
+
+The paper sorts <=64-entry neighbour lists with a parallel bottom-up merge
+sort and merges them into the worklist with the merge-path algorithm (one
+thread per element + binary search), both in GPU shared memory. TPUs have no
+per-lane scatter/binary-search, so we ADAPT (DESIGN.md §2): a bitonic
+compare-exchange network whose every stage is a reshape + elementwise min/max
+over VMEM-resident tiles -- the canonical lane-friendly sorting network.
+
+  * sort:  full bitonic network, O(log^2 n) stages of (B, n) tiles.
+  * merge: the two inputs are already sorted; concatenating list 1 with the
+    *reverse* of list 2 yields a bitonic sequence, so only the final merge
+    phase (log n stages) runs -- the exact work-complexity analogue of the
+    paper's merge-path step (O(l log l) work, O(log l) span).
+
+Keys are (dist, id) lexicographic; payloads (id, visited) ride along through
+the same where-masks. Padding uses (+inf, INT32_MAX, visited=1), which sorts
+last and never blocks convergence.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INT_MAX = jnp.int32(2**31 - 1)
+
+
+def _compare_exchange(d, i, v, j: int, k: int):
+    """One bitonic stage: partner = idx ^ j, direction from bit k of idx.
+
+    Implemented with reshapes (n // 2j, 2, j): the XOR-partner of every
+    element in the leading half of a 2j block is the matching element of the
+    trailing half; direction (ascending iff (idx & k) == 0) is constant per
+    2j-block and computed from a block iota.
+    """
+    B, n = d.shape
+    g = n // (2 * j)
+    d3 = d.reshape(B, g, 2, j)
+    i3 = i.reshape(B, g, 2, j)
+    v3 = v.reshape(B, g, 2, j)
+    a_d, b_d = d3[:, :, 0, :], d3[:, :, 1, :]
+    a_i, b_i = i3[:, :, 0, :], i3[:, :, 1, :]
+    a_v, b_v = v3[:, :, 0, :], v3[:, :, 1, :]
+
+    # ascending iff bit k of the absolute index is 0; abs idx of block g row
+    # starts at g*2j, and within a 2j block bit k is constant since k >= 2j.
+    blk = jax.lax.broadcasted_iota(jnp.int32, (1, g, 1), 1)
+    asc = ((blk * (2 * j)) & k) == 0                              # (1, g, 1)
+
+    a_gt_b = (a_d > b_d) | ((a_d == b_d) & (a_i > b_i))
+    swap = jnp.where(asc, a_gt_b, ~a_gt_b)                        # (B, g, j)
+
+    new_a_d = jnp.where(swap, b_d, a_d)
+    new_b_d = jnp.where(swap, a_d, b_d)
+    new_a_i = jnp.where(swap, b_i, a_i)
+    new_b_i = jnp.where(swap, a_i, b_i)
+    new_a_v = jnp.where(swap, b_v, a_v)
+    new_b_v = jnp.where(swap, a_v, b_v)
+
+    d = jnp.stack([new_a_d, new_b_d], axis=2).reshape(B, n)
+    i = jnp.stack([new_a_i, new_b_i], axis=2).reshape(B, n)
+    v = jnp.stack([new_a_v, new_b_v], axis=2).reshape(B, n)
+    return d, i, v
+
+
+def _bitonic_stages(d, i, v, n: int, full_sort: bool):
+    """full_sort: complete network; else only the final merge phase (k=n)."""
+    ks = []
+    if full_sort:
+        k = 2
+        while k <= n:
+            ks.append(k)
+            k *= 2
+    else:
+        ks = [n]
+    for k in ks:
+        j = k // 2
+        while j >= 1:
+            d, i, v = _compare_exchange(d, i, v, j, k)
+            j //= 2
+    return d, i, v
+
+
+def _sort_kernel(d_ref, i_ref, out_d_ref, out_i_ref, *, n: int):
+    d, i = d_ref[...], i_ref[...]
+    v = jnp.zeros_like(i)
+    d, i, _ = _bitonic_stages(d, i, v, n, full_sort=True)
+    out_d_ref[...] = d
+    out_i_ref[...] = i
+
+
+def _merge_kernel(
+    d1_ref, i1_ref, v1_ref, d2_ref, i2_ref, out_d_ref, out_i_ref, out_v_ref,
+    *, n: int, t: int
+):
+    # list 1 ascending ++ reversed list 2 => bitonic sequence; merge phase only.
+    d = jnp.concatenate([d1_ref[...], d2_ref[...][:, ::-1]], axis=-1)
+    i = jnp.concatenate([i1_ref[...], i2_ref[...][:, ::-1]], axis=-1)
+    v2 = jnp.zeros_like(i2_ref[...])
+    v = jnp.concatenate([v1_ref[...], v2[:, ::-1]], axis=-1)
+    d, i, v = _bitonic_stages(d, i, v, n, full_sort=False)
+    out_d_ref[...] = d[:, :t]
+    out_i_ref[...] = i[:, :t]
+    out_v_ref[...] = v[:, :t]
+
+
+def _pad_pow2(d, i, v=None):
+    B, n = d.shape
+    p = 1
+    while p < n:
+        p *= 2
+    if p != n:
+        d = jnp.pad(d, ((0, 0), (0, p - n)), constant_values=jnp.inf)
+        i = jnp.pad(i, ((0, 0), (0, p - n)), constant_values=2**31 - 1)
+        if v is not None:
+            v = jnp.pad(v, ((0, 0), (0, p - n)), constant_values=1)
+    return (d, i, v, p) if v is not None else (d, i, p)
+
+
+BROWS = 8  # queries per program
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sort_kv_pallas(dists, ids, *, interpret: bool = True):
+    """(B, n) sort ascending by (dist, id) via the bitonic network kernel."""
+    B, n0 = dists.shape
+    d, i, n = _pad_pow2(dists.astype(jnp.float32), ids.astype(jnp.int32))
+    pad_b = (-B) % BROWS
+    if pad_b:
+        d = jnp.pad(d, ((0, pad_b), (0, 0)), constant_values=jnp.inf)
+        i = jnp.pad(i, ((0, pad_b), (0, 0)), constant_values=2**31 - 1)
+    grid = ((B + pad_b) // BROWS,)
+    out_d, out_i = pl.pallas_call(
+        functools.partial(_sort_kernel, n=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BROWS, n), lambda b: (b, 0)),
+            pl.BlockSpec((BROWS, n), lambda b: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BROWS, n), lambda b: (b, 0)),
+            pl.BlockSpec((BROWS, n), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B + pad_b, n), jnp.float32),
+            jax.ShapeDtypeStruct((B + pad_b, n), jnp.int32),
+        ],
+        interpret=interpret,
+    )(d, i)
+    return out_d[:B, :n0], out_i[:B, :n0]
+
+
+@functools.partial(jax.jit, static_argnames=("t", "interpret"))
+def merge_pallas(d1, i1, v1, d2, i2, *, t: int, interpret: bool = True):
+    """Merge sorted (d1,i1,v1) (len t) with sorted (d2,i2) (len R); keep t."""
+    B = d1.shape[0]
+    # pad the *combined* length to a power of two by padding list 2
+    n_tot = d1.shape[1] + d2.shape[1]
+    p = 1
+    while p < n_tot:
+        p *= 2
+    extra = p - n_tot
+    if extra:
+        d2 = jnp.pad(d2, ((0, 0), (0, extra)), constant_values=jnp.inf)
+        i2 = jnp.pad(i2, ((0, 0), (0, extra)), constant_values=2**31 - 1)
+    pad_b = (-B) % BROWS
+    if pad_b:
+        pads = lambda x, cv: jnp.pad(x, ((0, pad_b), (0, 0)), constant_values=cv)
+        d1, i1, v1 = pads(d1, jnp.inf), pads(i1, 2**31 - 1), pads(v1.astype(jnp.int32), 1)
+        d2, i2 = pads(d2, jnp.inf), pads(i2, 2**31 - 1)
+    else:
+        v1 = v1.astype(jnp.int32)
+    n1, n2 = d1.shape[1], d2.shape[1]
+    grid = ((B + pad_b) // BROWS,)
+    spec1 = pl.BlockSpec((BROWS, n1), lambda b: (b, 0))
+    spec2 = pl.BlockSpec((BROWS, n2), lambda b: (b, 0))
+    spec_o = pl.BlockSpec((BROWS, t), lambda b: (b, 0))
+    out_d, out_i, out_v = pl.pallas_call(
+        functools.partial(_merge_kernel, n=p, t=t),
+        grid=grid,
+        in_specs=[spec1, spec1, spec1, spec2, spec2],
+        out_specs=[spec_o, spec_o, spec_o],
+        out_shape=[
+            jax.ShapeDtypeStruct((B + pad_b, t), jnp.float32),
+            jax.ShapeDtypeStruct((B + pad_b, t), jnp.int32),
+            jax.ShapeDtypeStruct((B + pad_b, t), jnp.int32),
+        ],
+        interpret=interpret,
+    )(d1.astype(jnp.float32), i1.astype(jnp.int32), v1, d2.astype(jnp.float32), i2.astype(jnp.int32))
+    return out_d[:B], out_i[:B], out_v[:B].astype(jnp.bool_)

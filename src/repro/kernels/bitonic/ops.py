@@ -1,0 +1,27 @@
+"""Jitted public wrappers for the bitonic sort/merge kernels."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.worklist import Worklist
+from repro.kernels.common import interpret_mode
+
+from .bitonic import merge_pallas, sort_kv_pallas
+from .ref import merge_ref, sort_kv_ref
+
+
+def sort_kv(dists: jax.Array, ids: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Sort (B, n) candidate lists ascending by (dist, id)."""
+    return sort_kv_pallas(dists, ids, interpret=interpret_mode())
+
+
+def merge_worklist(wl: Worklist, cand_dists: jax.Array, cand_ids: jax.Array) -> Worklist:
+    """Merge sorted candidates into the sorted worklist; keep t nearest."""
+    d, i, v = merge_pallas(
+        wl.dists, wl.ids, wl.visited, cand_dists, cand_ids,
+        t=wl.t, interpret=interpret_mode(),
+    )
+    return Worklist(d, i, v)
+
+
+__all__ = ["sort_kv", "merge_worklist", "sort_kv_ref", "merge_ref"]

@@ -1,0 +1,23 @@
+"""Pure-jnp oracles for the sort/merge kernels (lexicographic (dist, id))."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sort_kv_ref(dists: jax.Array, ids: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(B, n) ascending by (dist, id)."""
+    return jax.lax.sort((dists, ids), dimension=-1, num_keys=2)
+
+
+def merge_ref(
+    d1: jax.Array, i1: jax.Array, v1: jax.Array,
+    d2: jax.Array, i2: jax.Array,
+    t: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Merge sorted (d1,i1,v1) with sorted (d2,i2,unvisited); keep t best."""
+    d = jnp.concatenate([d1, d2], -1)
+    i = jnp.concatenate([i1, i2], -1)
+    v = jnp.concatenate([v1, jnp.zeros_like(i2, jnp.bool_)], -1)
+    sd, si, sv = jax.lax.sort((d, i, v.astype(jnp.int32)), dimension=-1, num_keys=2)
+    return sd[:, :t], si[:, :t], sv[:, :t].astype(jnp.bool_)

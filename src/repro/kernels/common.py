@@ -1,0 +1,38 @@
+"""Shared Pallas kernel plumbing.
+
+TPU is the target (pl.pallas_call + BlockSpec VMEM tiling); on CPU the same
+kernels execute under interpret=True, which is how every kernel here is
+validated against its ref.py oracle. `INTERPRET` may be forced via the
+REPRO_PALLAS_INTERPRET env var (tests set it).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+
+def interpret_mode() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def pad_axis(x: jax.Array, axis: int, multiple: int, value) -> jax.Array:
+    """Pad `axis` of x up to a multiple; returns x unchanged if aligned."""
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p

@@ -1,0 +1,1 @@
+# PQ asymmetric-distance computation kernel (paper §4.5 -- the 38% hot spot).

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: PQ asymmetric distance computation (paper §4.5).
+
+The paper's hottest kernel (~38% of billion-scale runtime): for each query and
+each of its R candidate neighbours, sum m per-subspace centroid distances out
+of the query's PQDistTable. The CUDA version tunes segmented warp reductions
+(atomics vs CUB WarpReduce); neither exists on TPU, so we ADAPT (DESIGN.md §2):
+
+  * one-hot × table contraction on the MXU ("onehot" variant, default):
+    codes (R, m) expand to one-hot (R, mc·256) per m-chunk and contract with
+    the table chunk -- a dense matmul the MXU executes at full rate; the
+    gather becomes structured compute instead of irregular memory traffic
+    (TPUs have no efficient per-lane gather, the exact inverse of the GPU
+    trade-off the paper tunes around).
+  * per-subspace dynamic-slice gather on the VPU ("gather" variant) for
+    comparison in benchmarks/bench_kernels.py, mirroring the paper's
+    atomicAdd-vs-WarpReduce ablation.
+
+Grid: one program per query (the paper's "one thread block per query"),
+R lanes wide. Table block (m, 256) f32 stays VMEM-resident across the m-chunk
+loop; m is padded to a multiple of MC with zero table entries (distance-
+neutral: padded subspaces contribute table[j, code]=0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MC = 8  # subspaces contracted per MXU step: onehot chunk (R, MC*256) f32
+
+
+def _adc_onehot_kernel(table_ref, codes_ref, valid_ref, out_ref):
+    # table (1, m, 256) f32 | codes (1, R, m) i32 | valid (1, R) i32 -> (1, R) f32
+    m = table_ref.shape[1]
+    R = codes_ref.shape[1]
+
+    def chunk(c, acc):
+        tbl = table_ref[0, pl.dslice(c * MC, MC), :]              # (MC, 256)
+        cod = codes_ref[0, :, pl.dslice(c * MC, MC)]              # (R, MC)
+        iota = jax.lax.broadcasted_iota(jnp.int32, (R, MC, 256), 2)
+        onehot = (cod[:, :, None] == iota).astype(jnp.float32)    # (R, MC, 256)
+        # contraction (R, MC*256) @ (MC*256,) on the MXU
+        partial = jax.lax.dot_general(
+            onehot.reshape(R, MC * 256),
+            tbl.reshape(MC * 256, 1),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )[:, 0]
+        return acc + partial
+
+    acc = jax.lax.fori_loop(0, m // MC, chunk, jnp.zeros((R,), jnp.float32))
+    out_ref[0, :] = jnp.where(valid_ref[0, :] > 0, acc, jnp.inf)
+
+
+def _adc_gather_kernel(table_ref, codes_ref, valid_ref, out_ref):
+    # VPU variant: per-subspace row select via one-hot-free take_along_axis.
+    m = table_ref.shape[1]
+    R = codes_ref.shape[1]
+    tbl = table_ref[0]                                            # (m, 256)
+    cod = codes_ref[0]                                            # (R, m)
+    gathered = jnp.take_along_axis(tbl[None, :, :], cod[:, :, None], axis=2)
+    acc = jnp.sum(gathered[..., 0], axis=1)                       # (R,)
+    out_ref[0, :] = jnp.where(valid_ref[0, :] > 0, acc, jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "interpret"))
+def adc_pallas(
+    table: jax.Array,    # (B, m, 256) f32
+    codes: jax.Array,    # (B, R, m) int32
+    valid: jax.Array,    # (B, R) bool
+    *,
+    variant: str = "onehot",
+    interpret: bool = True,
+) -> jax.Array:
+    B, m, _ = table.shape
+    R = codes.shape[1]
+    # pad m so the MXU chunk loop divides evenly; zero table rows are neutral
+    pad_m = (-m) % MC
+    if pad_m:
+        table = jnp.pad(table, ((0, 0), (0, pad_m), (0, 0)))
+        codes = jnp.pad(codes, ((0, 0), (0, 0), (0, pad_m)))
+        m += pad_m
+
+    kernel = _adc_onehot_kernel if variant == "onehot" else _adc_gather_kernel
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, m, 256), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, R, m), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, R), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, R), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, R), jnp.float32),
+        interpret=interpret,
+    )(table, codes.astype(jnp.int32), valid.astype(jnp.int32))

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the ADC kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adc_ref(table: jax.Array, codes: jax.Array, valid: jax.Array) -> jax.Array:
+    """table (B, m, 256) f32, codes (B, R, m) int, valid (B, R) bool -> (B, R).
+
+    dist[b, r] = sum_j table[b, j, codes[b, r, j]]; +inf where invalid.
+    """
+    idx = codes.astype(jnp.int32)
+    gathered = jnp.take_along_axis(
+        table[:, None, :, :], idx[:, :, :, None], axis=3
+    )[..., 0]
+    d = jnp.sum(gathered, axis=-1)
+    return jnp.where(valid, d, jnp.inf)

@@ -1,0 +1,1 @@
+# PQDistTable construction kernel (paper §4.2).

@@ -1,0 +1,23 @@
+"""Jitted public wrapper for PQDistTable construction."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pq import PQCodec, split_subspaces
+from repro.kernels.common import interpret_mode
+
+from .pq_table import dist_table_pallas
+from .ref import dist_table_ref
+
+
+def build_dist_table(codec: PQCodec, queries: jax.Array) -> jax.Array:
+    """(B, d) queries -> (B, m, 256) PQDistTable via the Pallas kernel."""
+    q_sub = split_subspaces(queries.astype(jnp.float32), codec.m)  # (m, B, dsub)
+    q_sub = q_sub.transpose(1, 0, 2)                               # (B, m, dsub)
+    return dist_table_pallas(
+        q_sub, codec.codebooks.astype(jnp.float32), interpret=interpret_mode()
+    )
+
+
+__all__ = ["build_dist_table", "dist_table_ref"]

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for PQDistTable construction."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dist_table_ref(q_sub: jax.Array, codebooks: jax.Array) -> jax.Array:
+    """q_sub (B, m, dsub), codebooks (m, 256, dsub) -> table (B, m, 256).
+
+    table[b, j, c] = || q_sub[b, j] - codebooks[j, c] ||^2
+    """
+    diff = q_sub[:, :, None, :] - codebooks[None, :, :, :]   # (B, m, 256, dsub)
+    return jnp.sum(diff * diff, axis=-1)

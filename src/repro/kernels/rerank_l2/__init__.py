@@ -1,0 +1,1 @@
+# Exact-L2 re-ranking kernel (paper §4.9).

@@ -1,0 +1,17 @@
+"""Jitted public wrapper for the exact-L2 re-rank kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.common import interpret_mode
+
+from .ref import exact_sq_dists_ref
+from .rerank_l2 import exact_sq_dists_pallas
+
+
+def exact_sq_dists(queries: jax.Array, cand_vecs: jax.Array) -> jax.Array:
+    """queries (B, d), cand_vecs (B, C, d) -> (B, C) exact squared L2."""
+    return exact_sq_dists_pallas(queries, cand_vecs, interpret=interpret_mode())
+
+
+__all__ = ["exact_sq_dists", "exact_sq_dists_ref"]

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the exact-L2 re-rank distance kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def exact_sq_dists_ref(queries: jax.Array, cand_vecs: jax.Array) -> jax.Array:
+    """queries (B, d), cand_vecs (B, C, d) -> (B, C) squared L2."""
+    diff = cand_vecs.astype(jnp.float32) - queries.astype(jnp.float32)[:, None, :]
+    return jnp.sum(diff * diff, axis=-1)

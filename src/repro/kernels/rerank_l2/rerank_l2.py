@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: exact squared-L2 distances for re-ranking (paper §4.9).
+
+After the search converges, every expanded candidate's *full* vector is
+scored against the query exactly. The paper computes each candidate distance
+with a parallel reduction per thread block; on TPU the natural mapping is a
+matvec on the MXU per query tile:
+
+    ||q - v||^2 = ||q||^2 + ||v||^2 - 2 <v, q>
+
+Grid: (B, C/CT). Candidate tiles (CT, d) stream through VMEM while the query
+row (1, d) stays resident; d is zero-padded to a lane multiple in the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CT = 128  # candidates per program
+
+
+def _rerank_kernel(q_ref, v_ref, out_ref):
+    # q (1, d) f32 | v (1, CT, d) f32 -> out (1, CT) f32
+    q = q_ref[0]                                            # (d,)
+    v = v_ref[0]                                            # (CT, d)
+    qn = jnp.sum(q * q)
+    vn = jnp.sum(v * v, axis=-1)                            # (CT,)
+    vq = jax.lax.dot_general(
+        v, q[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0]                                                 # (CT,)
+    out_ref[0, :] = qn + vn - 2.0 * vq
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def exact_sq_dists_pallas(
+    queries: jax.Array,    # (B, d)
+    cand_vecs: jax.Array,  # (B, C, d)
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    B, C, d = cand_vecs.shape
+    pad_d = (-d) % 128
+    if pad_d:
+        queries = jnp.pad(queries, ((0, 0), (0, pad_d)))
+        cand_vecs = jnp.pad(cand_vecs, ((0, 0), (0, 0), (0, pad_d)))
+        d += pad_d
+    pad_c = (-C) % CT
+    if pad_c:
+        cand_vecs = jnp.pad(cand_vecs, ((0, 0), (0, pad_c), (0, 0)))
+
+    out = pl.pallas_call(
+        _rerank_kernel,
+        grid=(B, (C + pad_c) // CT),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b, c: (b, 0)),
+            pl.BlockSpec((1, CT, d), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, CT), lambda b, c: (b, c)),
+        out_shape=jax.ShapeDtypeStruct((B, C + pad_c), jnp.float32),
+        interpret=interpret,
+    )(queries.astype(jnp.float32), cand_vecs.astype(jnp.float32))
+    return out[:, :C]

@@ -1,0 +1,156 @@
+"""ShapeDtypeStruct input specs + sharding specs for every (arch x shape) cell.
+
+`input_specs(cfg, shape)` returns stand-ins for every model input -- weak-type
+correct, shardable, no device allocation -- exactly what `.lower()` needs.
+`step_and_specs` binds the right step function (train/prefill/serve) and its
+in_shardings for a mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import LM_SHAPES, ModelConfig, ShapeSpec
+from repro.distributed import batch_pspec, cache_pspecs, param_pspecs
+from repro.models.transformer import LM
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def uses_bangkv(cfg: ModelConfig, shape: ShapeSpec) -> bool:
+    """long_500k decode uses the paper's machinery on every attention arch."""
+    return (
+        shape.name == "long_500k"
+        and shape.kind == "decode"
+        and cfg.n_heads > 0
+        and cfg.family != "ssm"
+    )
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Token/label/frontend ShapeDtypeStructs for a train/prefill batch."""
+    B, S = shape.global_batch, shape.seq_len
+    specs: dict[str, Any] = {}
+    if cfg.frontend == "vision_stub":
+        s_text = S - cfg.frontend_len
+        specs["tokens"] = _sds((B, s_text), jnp.int32)
+        specs["frontend"] = _sds((B, cfg.frontend_len, cfg.d_model), jnp.float32)
+        if shape.kind == "train":
+            specs["labels"] = _sds((B, s_text), jnp.int32)
+    elif cfg.frontend == "audio_stub":
+        specs["tokens"] = _sds((B, S), jnp.int32)
+        specs["frontend"] = _sds((B, cfg.frontend_len, cfg.d_model), jnp.float32)
+        if shape.kind == "train":
+            specs["labels"] = _sds((B, S), jnp.int32)
+    else:
+        specs["tokens"] = _sds((B, S), jnp.int32)
+        if shape.kind == "train":
+            specs["labels"] = _sds((B, S), jnp.int32)
+    return specs
+
+
+def param_specs(cfg: ModelConfig) -> Any:
+    lm = LM(cfg)
+    return jax.eval_shape(lm.init, jax.random.PRNGKey(0))
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec) -> Any:
+    lm = LM(cfg)
+    bangkv = uses_bangkv(cfg, shape)
+    return jax.eval_shape(
+        functools.partial(
+            lm.init_decode_caches,
+            shape.global_batch,
+            shape.seq_len,
+            bangkv=bangkv,
+            fill=shape.seq_len - 1,
+            memory_len=cfg.frontend_len,
+        )
+    )
+
+
+def _batch_pspec_tree(cfg: ModelConfig, specs: dict, mesh: Mesh):
+    bp = batch_pspec(mesh)
+    # batch dim must divide the DP axes product, else replicate
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            dp *= mesh.shape[a]
+
+    def spec(k, v):
+        if v.shape[0] % dp:
+            return P(*([None] * v.ndim))
+        return P(*([bp[0] if bp else None] + [None] * (v.ndim - 1)))
+
+    return {k: spec(k, v) for k, v in specs.items()}
+
+
+def step_and_specs(
+    cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh
+) -> tuple[Callable, tuple, tuple]:
+    """Return (step_fn, arg_specs, in_shardings) for one dry-run cell."""
+    lm = LM(cfg)
+    p_specs = param_specs(cfg)
+    p_sharding = param_pspecs(p_specs, mesh)
+    dp_total = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            dp_total *= mesh.shape[a]
+
+    if shape.kind == "train":
+        opt_specs = jax.eval_shape(adamw_init, p_specs)
+        opt_sharding = param_pspecs(opt_specs, mesh)
+        b_specs = batch_specs(cfg, shape)
+        b_sharding = _batch_pspec_tree(cfg, b_specs, mesh)
+
+        def train_step(params, opt_state, batch):
+            def loss_fn(p):
+                return lm.loss(p, batch)
+
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            params, opt_state, om = adamw_update(grads, opt_state, params, 1e-4)
+            return params, opt_state, loss
+
+        return (
+            train_step,
+            (p_specs, opt_specs, b_specs),
+            (p_sharding, opt_sharding, b_sharding),
+        )
+
+    if shape.kind == "prefill":
+        b_specs = batch_specs(cfg, shape)
+        b_sharding = _batch_pspec_tree(cfg, b_specs, mesh)
+
+        def prefill_step(params, batch):
+            return lm.prefill(params, batch)
+
+        return prefill_step, (p_specs, b_specs), (p_sharding, b_sharding)
+
+    # decode
+    c_specs = cache_specs(cfg, shape)
+    c_sharding = cache_pspecs(
+        c_specs, mesh, batch_divisible=shape.global_batch % dp_total == 0
+    )
+    tok_specs = _sds((shape.global_batch, 1), jnp.int32)
+    tok_sharding = (
+        P(batch_pspec(mesh)[0], None)
+        if shape.global_batch % dp_total == 0
+        else P(None, None)
+    )
+    bangkv = uses_bangkv(cfg, shape)
+
+    def serve_step(params, caches, tokens):
+        return lm.decode_step(params, caches, tokens, bangkv=bangkv)
+
+    return (
+        serve_step,
+        (p_specs, c_specs, tok_specs),
+        (p_sharding, c_sharding, tok_sharding),
+    )

@@ -1,0 +1,51 @@
+"""Training entrypoint.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b --reduced \
+        --steps 50 --ckpt-dir /tmp/run1
+
+On a real pod this is the per-host program (jax.distributed.initialize + the
+production mesh); on this container it runs single-device with reduced
+configs. The loop itself (checkpoint/resume/straggler handling) is identical.
+"""
+from __future__ import annotations
+
+import argparse
+
+import repro.configs as configs
+from repro.runtime import TrainLoopConfig, train_loop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(configs.ARCHS))
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-sized); full configs need a pod")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--peak-lr", type=float, default=3e-4)
+    ap.add_argument("--grad-compression", action="store_true")
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    out = train_loop(
+        cfg,
+        TrainLoopConfig(
+            steps=args.steps,
+            seq_len=args.seq_len,
+            global_batch=args.global_batch,
+            ckpt_dir=args.ckpt_dir,
+            ckpt_every=args.ckpt_every,
+            peak_lr=args.peak_lr,
+            grad_compression=args.grad_compression,
+        ),
+    )
+    print(f"final loss: {out['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

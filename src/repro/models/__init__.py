@@ -1,0 +1,2 @@
+# LM substrate: the assigned architectures as composable JAX modules.
+from .transformer import LM, init_params  # noqa: F401

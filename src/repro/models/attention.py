@@ -1,0 +1,230 @@
+"""GQA attention: train / prefill (chunked causal) and decode (KV cache).
+
+Memory discipline: full (S, S) score matrices are never materialised. Train
+and prefill run a flash-style query-chunked scan -- scores exist only as
+(B, H, q_chunk, S) blocks -- which, combined with remat over layers, is what
+bounds activation memory at the assigned 32k prefill shape. Sliding-window
+(gemma3 local) layers apply a band mask inside the same chunked loop.
+
+Decode attends one query token against the cache; for the long-context cells
+the cache is PQ-compressed and searched with the paper's machinery instead
+(models/retrieval_attention.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.partitioning import DP_AXES, TP_AXIS, constrain
+
+from .layers import apply_rope, truncated_normal_init
+
+Array = jax.Array
+
+
+class KVCache(NamedTuple):
+    k: Array       # (B, S_max, Hkv, hd)
+    v: Array       # (B, S_max, Hkv, hd)
+    index: Array   # () int32 -- current fill level
+
+
+def attn_params(key, d_model: int, n_heads: int, n_kv_heads: int, head_dim: int, dtype) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": truncated_normal_init(k1, (d_model, n_heads * head_dim), dtype=dtype),
+        "wk": truncated_normal_init(k2, (d_model, n_kv_heads * head_dim), dtype=dtype),
+        "wv": truncated_normal_init(k3, (d_model, n_kv_heads * head_dim), dtype=dtype),
+        "wo": truncated_normal_init(k4, (n_heads * head_dim, d_model), dtype=dtype),
+    }
+
+
+def _qkv(p: dict, x: Array, n_heads: int, n_kv_heads: int, head_dim: int):
+    B, S, _ = x.shape
+    # Megatron-TP + FSDP gather-before-use: weights are re-constrained to
+    # drop the `data` (FSDP) axis at their use site -- an explicit (small)
+    # weight all-gather -- and projection outputs are feature-sharded over
+    # `model`. Without both, GSPMD contracts over the FSDP-sharded dim and
+    # all-reduces activation-sized partial sums (measured GiB/layer).
+    wq = constrain(p["wq"], None, TP_AXIS)
+    wk = constrain(p["wk"], None, TP_AXIS)
+    wv = constrain(p["wv"], None, TP_AXIS)
+    q = constrain(x @ wq, DP_AXES, None, TP_AXIS).reshape(B, S, n_heads, head_dim)
+    k = constrain(x @ wk, DP_AXES, None, TP_AXIS).reshape(B, S, n_kv_heads, head_dim)
+    v = constrain(x @ wv, DP_AXES, None, TP_AXIS).reshape(B, S, n_kv_heads, head_dim)
+    return q, k, v
+
+
+def chunked_causal_attention(
+    q: Array,                 # (B, S, H, hd), rope applied
+    k: Array,                 # (B, S, Hkv, hd)
+    v: Array,                 # (B, S, Hkv, hd)
+    *,
+    chunk: int,
+    window: Array | int,      # >= S means full causal; traced OK (gemma3 scan)
+    kv_positions: Array | None = None,
+    bf16_scores: bool = False,   # opt_attn_bf16: halve score/prob HBM traffic
+    band: int | None = None,     # opt_window_skip: static key band per q-chunk
+) -> Array:
+    """Causal attention scanned over query chunks (flash-style).
+
+    With `band` set (local layers, static window), each query chunk only
+    multiplies against the `band` keys that can pass its sliding-window mask
+    -- a (c, band) score block instead of (c, S), cutting both score FLOPs
+    and HBM bytes by ~S/band on local layers (the gemma3 5:1 schedule makes
+    that 5/6 of the stack).
+    """
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = hd ** -0.5
+    n_chunks = max(S // chunk, 1)
+    c = S // n_chunks
+    assert n_chunks * c == S, "seq must divide by attn chunk"
+    in_dt = jnp.bfloat16 if bf16_scores else jnp.float32
+
+    qg = q.reshape(B, n_chunks, c, Hkv, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    # (n_chunks, B, Hkv, G, c, hd)
+    kT = k.transpose(0, 2, 3, 1)                       # (B, Hkv, hd, S)
+    vT = v.transpose(0, 2, 1, 3)                       # (B, Hkv, S, hd)
+    kv_pos = (
+        jnp.arange(S, dtype=jnp.int32) if kv_positions is None else kv_positions
+    )
+
+    def body(_, xs):
+        qc, ci = xs                                    # (B, Hkv, G, c, hd), ()
+        if band is not None and band < S:
+            start = jnp.clip(ci * c - (band - c), 0, S - band)
+            kT_c = jax.lax.dynamic_slice_in_dim(kT, start, band, axis=3)
+            vT_c = jax.lax.dynamic_slice_in_dim(vT, start, band, axis=2)
+            pos_c = start + jnp.arange(band, dtype=jnp.int32)
+        else:
+            kT_c, vT_c, pos_c = kT, vT, kv_pos
+        scores = jnp.einsum(
+            "bkgcd,bkds->bkgcs", qc.astype(in_dt), kT_c.astype(in_dt),
+            preferred_element_type=jnp.float32,
+        ) * scale                                      # (B, Hkv, G, c, S|band)
+        q_pos = ci * c + jnp.arange(c, dtype=jnp.int32)
+        causal = (pos_c[None, :] <= q_pos[:, None]) & (
+            pos_c[None, :] > q_pos[:, None] - window
+        )
+        scores = jnp.where(causal[None, None, None], scores, -jnp.inf)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum(
+            "bkgcs,bksd->bkgcd", probs.astype(in_dt), vT_c.astype(in_dt),
+            preferred_element_type=jnp.float32,
+        )
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(body, None, (qg, jnp.arange(n_chunks, dtype=jnp.int32)))
+    # (n_chunks, B, Hkv, G, c, hd) -> (B, S, H, hd)
+    return outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H, hd)
+
+
+def decode_attention(
+    q: Array,           # (B, 1, H, hd), rope applied
+    cache: KVCache,
+    *,
+    window: Array | int,
+) -> Array:
+    """One-token attention against the (possibly sequence-sharded) cache."""
+    B, _, H, hd = q.shape
+    Hkv = cache.k.shape[2]
+    G = H // Hkv
+    S = cache.k.shape[1]
+    scale = hd ** -0.5
+    qg = q.reshape(B, Hkv, G, hd)
+    scores = jnp.einsum(
+        "bkgd,bskd->bkgs", qg.astype(jnp.float32), cache.k.astype(jnp.float32)
+    ) * scale                                          # (B, Hkv, G, S)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    valid = (pos[None, :] < cache.index) & (pos[None, :] >= cache.index - window)
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, cache.v.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def cross_attention(
+    q: Array,           # (B, S, H, hd)
+    k: Array,           # (B, M, Hkv, hd) encoder memory
+    v: Array,
+) -> Array:
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = hd ** -0.5
+    qg = q.reshape(B, S, Hkv, G, hd)
+    scores = jnp.einsum(
+        "bskgd,bmkd->bksgm", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bksgm,bmkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def attention_block(
+    p: dict,
+    x: Array,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: Array | float,
+    attn_chunk: int,
+    window: Array | int,
+    causal: bool = True,
+    positions: Array | None = None,
+    cache: KVCache | None = None,
+    bf16_scores: bool = False,
+    window_skip: bool = False,
+) -> tuple[Array, KVCache | None]:
+    """Full attention sublayer. cache=None -> train/prefill; else decode.
+
+    `window` and `rope_theta` may be traced scalars -- gemma3's 5:1
+    local:global schedule rides through the layer scan as per-layer values.
+    When the stack is unrolled (static python `window`), `window_skip`
+    activates the banded local-attention path.
+    """
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, n_heads, n_kv_heads, head_dim)
+
+    if cache is None:
+        pos = jnp.arange(S, dtype=jnp.int32)[None, :] if positions is None else positions
+        q = apply_rope(q, pos, rope_theta)
+        k = apply_rope(k, pos, rope_theta)
+        if causal:
+            c = min(attn_chunk, S)
+            band = None
+            if window_skip and isinstance(window, int) and window + c < S:
+                band = min(S, -(-(window + c) // c) * c)   # round up to chunks
+            out = chunked_causal_attention(
+                q, k, v, chunk=c, window=window,
+                bf16_scores=bf16_scores, band=band,
+            )
+        else:  # encoder: full bidirectional (no mask)
+            scale = head_dim ** -0.5
+            G = n_heads // n_kv_heads
+            qg = q.reshape(B, S, n_kv_heads, G, head_dim)
+            scores = jnp.einsum(
+                "bskgd,bmkd->bksgm", qg.astype(jnp.float32), k.astype(jnp.float32)
+            ) * scale
+            probs = jax.nn.softmax(scores, axis=-1)
+            out = jnp.einsum(
+                "bksgm,bmkd->bskgd", probs, v.astype(jnp.float32)
+            ).reshape(B, S, n_heads, head_dim).astype(x.dtype)
+        new_cache = (k, v)  # roped k -- prefill assembles the decode cache
+    else:
+        pos = cache.index[None, None]                       # query position
+        q = apply_rope(q, jnp.broadcast_to(pos, (B, 1)), rope_theta)
+        k = apply_rope(k, jnp.broadcast_to(pos, (B, 1)), rope_theta)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), cache.index, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), cache.index, axis=1)
+        new_cache = KVCache(ck, cv, cache.index + 1)
+        out = decode_attention(q, new_cache, window=window)
+
+    o = constrain(out.reshape(B, S, n_heads * head_dim), DP_AXES, None, TP_AXIS)
+    wo = constrain(p["wo"], TP_AXIS, None)
+    y = constrain(o @ wo, DP_AXES, None, None)
+    return y, new_cache

@@ -1,0 +1,34 @@
+"""SwiGLU feed-forward (LLaMA/phi/gemma family standard)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.partitioning import DP_AXES, TP_AXIS, constrain
+
+from .layers import truncated_normal_init
+
+Array = jax.Array
+
+
+def ffn_params(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": truncated_normal_init(k1, (d_model, d_ff), dtype=dtype),
+        "w_up": truncated_normal_init(k2, (d_model, d_ff), dtype=dtype),
+        "w_down": truncated_normal_init(k3, (d_ff, d_model), dtype=dtype),
+    }
+
+
+def swiglu(p: dict, x: Array) -> Array:
+    # Megatron-TP pair with FSDP gather-before-use (see attention._qkv):
+    # hidden activations sharded over `model` between the up- and down-
+    # projections; one (B,S,D) all-reduce after w_down only.
+    nd = (None,) * (x.ndim - 2)
+    wg = constrain(p["w_gate"], None, TP_AXIS)
+    wu = constrain(p["w_up"], None, TP_AXIS)
+    wd = constrain(p["w_down"], TP_AXIS, None)
+    gate = constrain(x @ wg, DP_AXES, *nd, TP_AXIS)
+    up = constrain(x @ wu, DP_AXES, *nd, TP_AXIS)
+    gate = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
+    return constrain((gate * up) @ wd, DP_AXES, *nd, None)

@@ -1,0 +1,91 @@
+"""Shared layer primitives: norms, RoPE, embeddings, initialisers.
+
+Parameters are plain pytrees (nested dicts of jax.Array); models are pure
+functions of (params, inputs). Compute dtype is bf16 by default; norms and
+softmax accumulate in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def truncated_normal_init(key: Array, shape, scale: float = 0.02, dtype=jnp.bfloat16) -> Array:
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rmsnorm(x: Array, weight: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x: Array, weight: Array, bias: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    normed = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (normed * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm(x: Array, p: dict, kind: str, eps: float) -> Array:
+    if kind == "layernorm":
+        return layernorm(x, p["w"], p["b"], eps)
+    return rmsnorm(x, p["w"], eps)
+
+
+def norm_params(d: int, kind: str) -> dict:
+    if kind == "layernorm":
+        return {"w": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+    return {"w": jnp.zeros((d,), jnp.float32)}  # rmsnorm stores (1+w)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, hd), positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def embed(tokens: Array, table: Array) -> Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed_chunked(h: Array, table: Array, labels: Array, chunk: int) -> Array:
+    """Sequence-chunked cross-entropy: never materialises (B, S, V) at once.
+
+    h: (B, S, D), table: (V, D) (tied) -> scalar mean CE over all tokens.
+    The scan over S-chunks bounds the logits buffer to (B, chunk, V), which is
+    what keeps vocab-262k archs inside per-chip HBM at train shapes.
+    """
+    B, S, D = h.shape
+    n_chunks = max(S // chunk, 1)
+    c = S // n_chunks
+    hs = h[:, : n_chunks * c].reshape(B, n_chunks, c, D).swapaxes(0, 1)
+    ls = labels[:, : n_chunks * c].reshape(B, n_chunks, c).swapaxes(0, 1)
+
+    def body(carry, xs):
+        from repro.distributed.partitioning import DP_AXES, TP_AXIS, constrain
+
+        hc, lc = xs                                        # (B, c, D), (B, c)
+        logits = constrain(
+            jnp.einsum("bcd,vd->bcv", hc.astype(jnp.float32), table.astype(jnp.float32)),
+            DP_AXES, None, TP_AXIS,
+        )
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ls))
+    return total / (B * n_chunks * c)

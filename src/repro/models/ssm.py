@@ -1,0 +1,225 @@
+"""Mamba2 / SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Train path: the chunked SSD algorithm -- within-chunk quadratic attention-like
+term + cross-chunk state recurrence via an associative scan. Chunk size Q is
+cfg.ssm_chunk; all recurrence math runs in f32.
+
+Decode path: the O(1) recurrent step carrying (conv window, SSM state) --
+this is what makes the long_500k cell native for ssm/hybrid archs (state is
+O(H·P·N) regardless of context).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.partitioning import DP_AXES, TP_AXIS, constrain
+
+from .layers import rmsnorm, truncated_normal_init
+
+Array = jax.Array
+
+
+class SSMCache(NamedTuple):
+    conv: Array    # (B, K-1, conv_ch) rolling conv window
+    state: Array   # (B, H, P, N) SSM state
+
+
+def ssm_params(key, d_model: int, *, expand: int, state: int, conv: int,
+               head_dim: int, groups: int, dtype) -> dict:
+    di = expand * d_model
+    H = di // head_dim
+    conv_ch = di + 2 * groups * state
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "in_proj": truncated_normal_init(k1, (d_model, 2 * di + 2 * groups * state + H), dtype=dtype),
+        "conv_w": truncated_normal_init(k2, (conv, conv_ch), scale=0.1, dtype=jnp.float32),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),          # A = -exp(A_log) = -1 init
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -4.6, jnp.float32),   # softplus^-1(0.01)
+        "norm_w": jnp.zeros((di,), jnp.float32),
+        "out_proj": truncated_normal_init(k3, (di, d_model), dtype=dtype),
+    }
+
+
+def _split_proj(p, x, di, gn, H):
+    w = constrain(p["in_proj"], None, TP_AXIS)
+    proj = constrain(x @ w, DP_AXES, None, TP_AXIS)
+    z = proj[..., :di]
+    xbc = proj[..., di : 2 * di + 2 * gn]
+    dt = proj[..., 2 * di + 2 * gn :]
+    return z, xbc, dt
+
+
+def _causal_conv(p, xbc: Array) -> Array:
+    """Depthwise causal conv1d (K taps) + SiLU, train-time full sequence."""
+    K = p["conv_w"].shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1]] * p["conv_w"][i][None, None, :]
+        for i in range(K)
+    )
+    return jax.nn.silu(out.astype(jnp.float32) + p["conv_b"]).astype(xbc.dtype)
+
+
+def _segsum(a: Array) -> Array:
+    """L[i, j] = sum_{j < l <= i} a[l] for i >= j, -inf otherwise.
+
+    a: (..., Q) -> (..., Q, Q). Standard SSD helper.
+    """
+    Q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]          # (.., i, j) = sum(j+1..i)
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: Array,      # (B, S, H, P) f32
+    dt: Array,     # (B, S, H)    f32 (softplus applied)
+    A: Array,      # (H,)         f32 (negative)
+    Bm: Array,     # (B, S, G, N) f32
+    Cm: Array,     # (B, S, G, N) f32
+    chunk: int,
+    init_state: Array | None = None,   # (B, H, P, N)
+) -> tuple[Array, Array]:
+    """Chunked SSD. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    B_, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = min(chunk, S)
+    nc = S // Q
+    assert nc * Q == S, "seq must divide by ssm chunk"
+
+    xr = x.reshape(B_, nc, Q, H, P)
+    dtr = dt.reshape(B_, nc, Q, H)
+    Br = jnp.repeat(Bm.reshape(B_, nc, Q, G, N), rep, axis=3)   # (B,nc,Q,H,N)
+    Cr = jnp.repeat(Cm.reshape(B_, nc, Q, G, N), rep, axis=3)
+
+    a = dtr * A[None, None, None, :]                            # (B,nc,Q,H)
+    a_t = a.transpose(0, 1, 3, 2)                               # (B,nc,H,Q)
+    L = jnp.exp(_segsum(a_t))                                   # (B,nc,H,Q,Q)
+
+    # Intra-chunk (the "quadratic attention" dual form).
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Cr, Br)           # (B,nc,H,Q,Q)
+    y_intra = jnp.einsum(
+        "bchqk,bckh,bckhp->bcqhp", scores * L, dtr, xr
+    )
+
+    # Chunk-final states.
+    cum_a = jnp.cumsum(a_t, axis=-1)                            # (B,nc,H,Q)
+    decay_to_end = jnp.exp(cum_a[..., -1:] - cum_a)             # (B,nc,H,Q)
+    states = jnp.einsum(
+        "bchq,bcqh,bcqhn,bcqhp->bchpn", decay_to_end, dtr, Br, xr
+    )                                                           # (B,nc,H,P,N)
+
+    # Inter-chunk recurrence: state_c = exp(sum a_c) * state_{c-1} + states_c.
+    chunk_decay = jnp.exp(jnp.sum(a_t, axis=-1))                # (B,nc,H)
+
+    def combine(e1, e2):
+        d1, s1 = e1
+        d2, s2 = e2
+        return d1 * d2, s1 * d2[..., None, None] + s2
+
+    init = (
+        jnp.zeros((B_, H), jnp.float32) if init_state is None else jnp.ones((B_, H), jnp.float32),
+        jnp.zeros((B_, H, P, N), jnp.float32) if init_state is None else init_state,
+    )
+    # prepend the initial state as chunk -1, scan across chunks
+    decays = jnp.concatenate([jnp.ones((B_, 1, H)), chunk_decay], axis=1)
+    states_all = jnp.concatenate([init[1][:, None], states], axis=1)
+    d_sc, s_sc = jax.lax.associative_scan(
+        combine, (decays, states_all), axis=1
+    )                                                           # inclusive
+    prev_states = s_sc[:, :-1]                                  # state entering chunk c
+    final_state = s_sc[:, -1]
+
+    # Inter-chunk output: y[i] += C_i . (decay_from_start_to_i * prev_state).
+    decay_from_start = jnp.exp(cum_a)                           # (B,nc,H,Q)
+    y_inter = jnp.einsum(
+        "bcqhn,bchpn,bchq->bcqhp", Cr, prev_states, decay_from_start
+    )
+    y = (y_intra + y_inter).reshape(B_, S, H, P)
+    return y, final_state
+
+
+def ssm_block(
+    p: dict,
+    x: Array,                  # (B, S, D)
+    *,
+    expand: int,
+    state: int,
+    conv: int,
+    head_dim: int,
+    groups: int,
+    chunk: int,
+    cache: SSMCache | None = None,
+    return_cache: bool = False,
+) -> tuple[Array, SSMCache | None]:
+    """Full Mamba2 block: in_proj -> conv -> SSD -> gated norm -> out_proj."""
+    B_, S, D = x.shape
+    di = expand * D
+    H = di // head_dim
+    gn = groups * state
+    z, xbc, dt_raw = _split_proj(p, x, di, gn, H)
+
+    if cache is None:
+        K = p["conv_w"].shape[0]
+        xbc_tail = xbc[:, max(S - (K - 1), 0):]       # prefill conv window
+        xbc = _causal_conv(p, xbc)
+        new_cache = None
+    else:
+        # decode: roll the conv window
+        window = jnp.concatenate([cache.conv, xbc], axis=1)     # (B, K, ch)
+        K = p["conv_w"].shape[0]
+        out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), p["conv_w"])
+        xbc = jax.nn.silu(out + p["conv_b"])[:, None, :].astype(x.dtype)
+        new_conv = window[:, 1:]
+
+    xs = xbc[..., :di].astype(jnp.float32).reshape(B_, S, H, head_dim)
+    Bm = xbc[..., di : di + gn].astype(jnp.float32).reshape(B_, S, groups, state)
+    Cm = xbc[..., di + gn :].astype(jnp.float32).reshape(B_, S, groups, state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    if cache is None:
+        y, final_state = ssd_chunked(xs, dt, A, Bm, Cm, chunk)
+        if return_cache:
+            K = p["conv_w"].shape[0]
+            pad = (K - 1) - xbc_tail.shape[1]
+            if pad > 0:
+                xbc_tail = jnp.pad(xbc_tail, ((0, 0), (pad, 0), (0, 0)))
+            new_cache = SSMCache(xbc_tail.astype(jnp.bfloat16), final_state)
+    else:
+        # O(1) recurrent step: state = exp(dt A) state + dt B x^T ; y = C.state
+        rep = H // groups
+        Bh = jnp.repeat(Bm[:, 0], rep, axis=1)                  # (B, H, N)
+        Ch = jnp.repeat(Cm[:, 0], rep, axis=1)
+        da = jnp.exp(dt[:, 0] * A[None, :])                     # (B, H)
+        newstate = (
+            cache.state * da[..., None, None]
+            + jnp.einsum("bh,bhn,bhp->bhpn", dt[:, 0], Bh, xs[:, 0])
+        )
+        y = jnp.einsum("bhn,bhpn->bhp", Ch, newstate)[:, None]  # (B,1,H,P)
+        new_cache = SSMCache(new_conv, newstate)
+
+    y = y + p["D"][None, None, :, None] * xs
+    y = y.reshape(B_, S, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm(y.astype(x.dtype), p["norm_w"])
+    wo = constrain(p["out_proj"], TP_AXIS, None)
+    return constrain(y @ wo, DP_AXES, None, None), new_cache
+
+
+def ssm_cache_init(batch: int, p: dict, *, expand: int, d_model: int,
+                   state: int, conv: int, head_dim: int, groups: int) -> SSMCache:
+    di = expand * d_model
+    H = di // head_dim
+    conv_ch = di + 2 * groups * state
+    return SSMCache(
+        conv=jnp.zeros((batch, conv - 1, conv_ch), jnp.bfloat16),
+        state=jnp.zeros((batch, H, head_dim, state), jnp.float32),
+    )

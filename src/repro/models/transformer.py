@@ -1,0 +1,608 @@
+"""The LM: assigned architectures assembled from the substrate modules.
+
+One decoder-stack implementation covers dense / moe / vlm (uniform layers with
+per-layer flags riding through a lax.scan), ssm (Mamba2 stack), and hybrid
+(Zamba2: grouped Mamba2 scan + a weight-shared attention block between
+groups). Whisper adds an encoder stack + cross-attention.
+
+Scan-over-layers + optional remat keeps HLO size and activation memory
+bounded at 62-layer/262k-vocab scale -- required for the dry-run cells to
+compile in reasonable time and fit per-chip HBM.
+
+Modes:
+    train    full causal, chunked attention, seq-chunked CE loss
+    prefill  same forward, returns KV caches + last-position logits
+    decode   one token against caches (exact KV or BANG-KV)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.partitioning import DP_AXES, TP_AXIS, constrain
+
+from . import retrieval_attention as bkv
+from .attention import KVCache, attention_block, cross_attention
+from .ffn import ffn_params, swiglu
+from .layers import embed, norm, norm_params, truncated_normal_init, unembed_chunked
+from .moe import MoEAux, moe_block, moe_params
+from .ssm import SSMCache, ssm_block, ssm_cache_init, ssm_params
+from .attention import attn_params
+
+Array = jax.Array
+
+
+def _pick_chunk(S: int, target: int) -> int:
+    """Largest divisor of S that is <= target (chunked attention/CE tiling)."""
+    c = min(target, S)
+    while S % c:
+        c -= 1
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation
+# ---------------------------------------------------------------------------
+
+def _dense_layer_params(cfg: ModelConfig, key, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn_norm": norm_params(cfg.d_model, cfg.norm_kind),
+        "attn": attn_params(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, dtype),
+        "ffn_norm": norm_params(cfg.d_model, cfg.norm_kind),
+    }
+    if cfg.n_experts:
+        p["moe"] = moe_params(k2, cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.n_shared_experts, dtype)
+    else:
+        p["ffn"] = ffn_params(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _ssm_layer_params(cfg: ModelConfig, key, dtype) -> dict:
+    return {
+        "norm": norm_params(cfg.d_model, cfg.norm_kind),
+        "ssm": ssm_params(
+            key, cfg.d_model, expand=cfg.ssm_expand, state=cfg.ssm_state,
+            conv=cfg.ssm_conv, head_dim=cfg.ssm_head_dim, groups=cfg.ssm_groups,
+            dtype=dtype,
+        ),
+    }
+
+
+def _encdec_decoder_layer_params(cfg: ModelConfig, key, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = _dense_layer_params(cfg, k1, dtype)
+    p["cross_norm"] = norm_params(cfg.d_model, cfg.norm_kind)
+    p["cross"] = attn_params(k2, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, dtype)
+    return p
+
+
+def _stack_params(fn, key, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(fn)(keys)
+
+
+def init_params(cfg: ModelConfig, key: Array) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": truncated_normal_init(keys[0], (cfg.vocab_size, cfg.d_model), dtype=dtype),
+        "final_norm": norm_params(cfg.d_model, cfg.norm_kind),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = truncated_normal_init(keys[1], (cfg.d_model, cfg.vocab_size), dtype=dtype)
+
+    if cfg.family == "ssm":
+        params["layers"] = _stack_params(
+            lambda k: _ssm_layer_params(cfg, k, dtype), keys[2], cfg.n_layers
+        )
+    elif cfg.family == "hybrid":
+        params["layers"] = _stack_params(
+            lambda k: _ssm_layer_params(cfg, k, dtype), keys[2], cfg.n_layers
+        )
+        params["shared_attn"] = _dense_layer_params(cfg, keys[3], dtype)
+        n_groups = cfg.n_layers // cfg.hybrid_attn_every
+        params["bangkv_codebooks"] = _stack_params(
+            lambda k: bkv.bangkv_codebook_params(k, cfg.n_kv_heads, cfg.head_dim, cfg.bangkv_m),
+            keys[4], n_groups,
+        )
+    elif cfg.arch_kind == "encdec":
+        params["layers"] = _stack_params(
+            lambda k: _encdec_decoder_layer_params(cfg, k, dtype), keys[2], cfg.n_layers
+        )
+        params["encoder"] = {
+            "layers": _stack_params(
+                lambda k: _dense_layer_params(cfg, k, dtype), keys[3], cfg.n_encoder_layers
+            ),
+            "final_norm": norm_params(cfg.d_model, cfg.norm_kind),
+        }
+        params["bangkv_codebooks"] = _stack_params(
+            lambda k: bkv.bangkv_codebook_params(k, cfg.n_kv_heads, cfg.head_dim, cfg.bangkv_m),
+            keys[4], cfg.n_layers,
+        )
+    else:  # dense / moe / vlm
+        params["layers"] = _stack_params(
+            lambda k: _dense_layer_params(cfg, k, dtype), keys[2], cfg.n_layers
+        )
+        params["bangkv_codebooks"] = _stack_params(
+            lambda k: bkv.bangkv_codebook_params(k, cfg.n_kv_heads, cfg.head_dim, cfg.bangkv_m),
+            keys[4], cfg.n_layers,
+        )
+    return params
+
+
+def layer_flags(cfg: ModelConfig, s_ref: int) -> dict:
+    """Per-layer (window, rope_theta) arrays for the scan (gemma3 5:1)."""
+    L = cfg.n_layers
+    if cfg.local_global_ratio and cfg.sliding_window:
+        r = cfg.local_global_ratio
+        is_global = (jnp.arange(L) % (r + 1)) == r
+        window = jnp.where(is_global, jnp.int32(s_ref + 1), jnp.int32(cfg.sliding_window))
+        theta = jnp.where(is_global, cfg.rope_theta, 10_000.0).astype(jnp.float32)
+    else:
+        w = cfg.sliding_window if cfg.sliding_window else s_ref + 1
+        window = jnp.full((L,), w, jnp.int32)
+        theta = jnp.full((L,), cfg.rope_theta, jnp.float32)
+    return {"window": window, "theta": theta}
+
+
+# ---------------------------------------------------------------------------
+# Layer bodies
+# ---------------------------------------------------------------------------
+
+def _dense_layer(cfg: ModelConfig, p, h, window, theta, cache, mode: str,
+                 codebooks=None, cross_mem=None):
+    """One dense/moe decoder layer. Returns (h, new_cache, aux)."""
+    aux = MoEAux(jnp.zeros(()), jnp.zeros(()), jnp.zeros(()))
+    # Keep activations batch-sharded over DP at every layer boundary --
+    # without this GSPMD inherits the embedding table's sharding and
+    # reshards per layer (measured: ~700 all-to-alls/step on a dense arch).
+    h = constrain(h, DP_AXES, None, None)
+    x = norm(h, p["attn_norm"], cfg.norm_kind, cfg.norm_eps)
+    if mode == "decode_bangkv":
+        y, new_cache = bkv.bangkv_attention_block(
+            p["attn"], codebooks, x, cache,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            rope_theta=theta, top_l=cfg.bangkv_topl, window=cfg.bangkv_window,
+            hier_topk=cfg.opt_hier_topk, adc_lite=cfg.opt_adc_lite,
+        )
+    else:
+        y, new_cache = attention_block(
+            p["attn"], x,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            rope_theta=theta, attn_chunk=_pick_chunk(x.shape[1], cfg.attn_chunk),
+            window=window, cache=cache if mode == "decode" else None,
+            bf16_scores=cfg.opt_attn_bf16, window_skip=cfg.opt_window_skip,
+        )
+        if mode == "train":
+            new_cache = None  # never stack train-time K/V through the scan
+        elif mode == "prefill":
+            k, v = new_cache
+            new_cache = KVCache(k=k, v=v, index=jnp.int32(x.shape[1]))
+    h = h + y
+
+    if cross_mem is not None:  # whisper decoder cross-attention
+        x = norm(h, p["cross_norm"], cfg.norm_kind, cfg.norm_eps)
+        ck, cv = cross_mem
+        B, S, _ = x.shape
+        q = (x @ p["cross"]["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+        y = cross_attention(q, ck, cv)
+        h = h + y.reshape(B, S, -1) @ p["cross"]["wo"]
+
+    x = norm(h, p["ffn_norm"], cfg.norm_kind, cfg.norm_eps)
+    if cfg.n_experts:
+        y, aux = moe_block(
+            p["moe"], x, n_experts=cfg.n_experts, top_k=cfg.moe_top_k,
+            capacity_factor=cfg.capacity_factor, bf16_compute=cfg.opt_moe_bf16,
+        )
+    else:
+        y = swiglu(p["ffn"], x)
+    return h + y, new_cache, aux
+
+
+def _ssm_layer(cfg: ModelConfig, p, h, cache, mode: str):
+    h = constrain(h, DP_AXES, None, None)
+    x = norm(h, p["norm"], cfg.norm_kind, cfg.norm_eps)
+    S = x.shape[1]
+    y, new_cache = ssm_block(
+        p["ssm"], x,
+        expand=cfg.ssm_expand, state=cfg.ssm_state, conv=cfg.ssm_conv,
+        head_dim=cfg.ssm_head_dim, groups=cfg.ssm_groups,
+        chunk=_pick_chunk(S, cfg.ssm_chunk),
+        cache=cache if mode.startswith("decode") else None,
+        return_cache=(mode == "prefill"),
+    )
+    return h + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+
+def _scan_stack(cfg: ModelConfig, body, h, xs, mode: str):
+    """scan over stacked layers; remat the body in train mode."""
+    aux0 = MoEAux(jnp.zeros(()), jnp.zeros(()), jnp.zeros(()))
+
+    def wrapped(carry, x):
+        h, aux = carry
+        h, new_cache, aux_l = body(h, x)
+        aux = MoEAux(*(a + b for a, b in zip(aux, aux_l)))
+        return (h, aux), new_cache
+
+    if cfg.remat and mode == "train":
+        wrapped = jax.checkpoint(wrapped)
+    if cfg.scan_layers:
+        (h, aux), caches = jax.lax.scan(wrapped, (h, aux0), xs)
+    else:
+        carry, caches_list = (h, aux0), []
+        L = jax.tree_util.tree_leaves(xs)[0].shape[0]
+        for i in range(L):
+            x_i = jax.tree.map(lambda a: a[i], xs)
+            carry, c_i = wrapped(carry, x_i)
+            caches_list.append(c_i)
+        h, aux = carry
+        caches = (
+            jax.tree.map(lambda *cs: jnp.stack(cs), *caches_list)
+            if caches_list and caches_list[0] is not None
+            else None
+        )
+    return h, aux, caches
+
+
+def static_layer_flags(cfg: ModelConfig, s_ref: int) -> tuple[list, list]:
+    """Python-int (window, theta) per layer -- unrolled stacks only.
+
+    Static windows are what allow the banded local-attention path
+    (opt_window_skip) to slice keys with fixed sizes.
+    """
+    wins, thetas = [], []
+    for i in range(cfg.n_layers):
+        if cfg.local_global_ratio and cfg.sliding_window:
+            r = cfg.local_global_ratio
+            is_global = (i % (r + 1)) == r
+            wins.append(s_ref + 1 if is_global else cfg.sliding_window)
+            thetas.append(cfg.rope_theta if is_global else 10_000.0)
+        else:
+            wins.append(cfg.sliding_window or s_ref + 1)
+            thetas.append(cfg.rope_theta)
+    return wins, thetas
+
+
+def _unrolled_dense_stack(cfg: ModelConfig, params, h, *, mode: str, caches,
+                          s_ref: int, cross_mem=None):
+    """Python-loop layer stack (scan_layers=False): static per-layer flags."""
+    wins, thetas = static_layer_flags(cfg, s_ref)
+    aux = MoEAux(jnp.zeros(()), jnp.zeros(()), jnp.zeros(()))
+    new_caches = []
+    for i in range(cfg.n_layers):
+        p_i = jax.tree.map(lambda a, i=i: a[i], params["layers"])
+        cache_i = (
+            jax.tree.map(lambda a, i=i: a[i], caches)
+            if (caches is not None and mode.startswith("decode")) else None
+        )
+        cb_i = params["bangkv_codebooks"][i] if mode == "decode_bangkv" else None
+        cm_i = (
+            (cross_mem[0][i], cross_mem[1][i]) if cross_mem is not None else None
+        )
+        h, c_i, aux_i = _dense_layer(
+            cfg, p_i, h, wins[i], thetas[i], cache_i, mode,
+            codebooks=cb_i, cross_mem=cm_i,
+        )
+        aux = MoEAux(*(a + b for a, b in zip(aux, aux_i)))
+        if c_i is not None:
+            new_caches.append(c_i)
+    stacked = (
+        jax.tree.map(lambda *cs: jnp.stack(cs), *new_caches) if new_caches else None
+    )
+    return h, aux, stacked
+
+
+def decoder_stack(cfg: ModelConfig, params, h, *, mode: str, caches=None,
+                  cross_mem=None):
+    """Run the decoder layers. Returns (h, aux, new_caches)."""
+    S = h.shape[1]
+    if mode.startswith("decode") and caches is not None and hasattr(caches, "k"):
+        s_ref = caches.k.shape[2]
+    elif mode.startswith("decode") and isinstance(caches, tuple) and hasattr(caches[0], "k"):
+        s_ref = caches[0].k.shape[2]
+    else:
+        s_ref = S
+    flags = layer_flags(cfg, s_ref=s_ref)
+
+    if (
+        not cfg.scan_layers
+        and cfg.family in ("dense", "moe", "vlm", "audio")
+    ):
+        cm = cross_mem if cfg.arch_kind == "encdec" else None
+        return _unrolled_dense_stack(
+            cfg, params, h, mode=mode, caches=caches, s_ref=s_ref, cross_mem=cm
+        )
+
+    if cfg.family in ("dense", "moe", "vlm", "audio") and cfg.arch_kind == "decoder":
+        xs = {"p": params["layers"], "window": flags["window"], "theta": flags["theta"]}
+        if mode in ("decode", "decode_bangkv"):
+            xs["cache"] = caches
+        if mode == "decode_bangkv":
+            xs["cb"] = params["bangkv_codebooks"]
+
+        def body(h, x):
+            cache = x.get("cache")
+            h, new_cache, aux = _dense_layer(
+                cfg, x["p"], h, x["window"], x["theta"], cache, mode,
+                codebooks=x.get("cb"),
+            )
+            return h, new_cache, aux
+
+        return _scan_stack(cfg, body, h, xs, mode)
+
+    if cfg.family == "ssm":
+        xs = {"p": params["layers"]}
+        if mode.startswith("decode"):
+            xs["cache"] = caches
+
+        def body(h, x):
+            h, new_cache = _ssm_layer(cfg, x["p"], h, x.get("cache"), mode)
+            return h, new_cache, MoEAux(jnp.zeros(()), jnp.zeros(()), jnp.zeros(()))
+
+        return _scan_stack(cfg, body, h, xs, mode)
+
+    if cfg.family == "hybrid":
+        return _hybrid_stack(cfg, params, h, mode=mode, caches=caches)
+
+    if cfg.arch_kind == "encdec":
+        xs = {"p": params["layers"], "window": flags["window"], "theta": flags["theta"],
+              "cross_k": cross_mem[0], "cross_v": cross_mem[1]}
+        if mode in ("decode", "decode_bangkv"):
+            xs["cache"] = caches
+        if mode == "decode_bangkv":
+            xs["cb"] = params["bangkv_codebooks"]
+
+        def body(h, x):
+            h, new_cache, aux = _dense_layer(
+                cfg, x["p"], h, x["window"], x["theta"], x.get("cache"), mode,
+                codebooks=x.get("cb"), cross_mem=(x["cross_k"], x["cross_v"]),
+            )
+            return h, new_cache, aux
+
+        return _scan_stack(cfg, body, h, xs, mode)
+
+    raise ValueError(f"unhandled family {cfg.family}")
+
+
+def _hybrid_stack(cfg: ModelConfig, params, h, *, mode: str, caches):
+    """Zamba2: groups of Mamba2 layers with a shared attention block between.
+
+    caches = (ssm_caches stacked (L,...), attn_caches stacked (n_groups,...))
+    """
+    every = cfg.hybrid_attn_every
+    n_groups = cfg.n_layers // every
+    ssm_caches, attn_caches = caches if caches is not None else (None, None)
+    aux_total = MoEAux(jnp.zeros(()), jnp.zeros(()), jnp.zeros(()))
+    new_ssm, new_attn = [], []
+    s_ref = h.shape[1] if not mode.startswith("decode") else (
+        attn_caches.k.shape[2] if isinstance(attn_caches, (KVCache, bkv.BangKVCache)) else h.shape[1]
+    )
+
+    for g in range(n_groups):
+        sl = lambda a, g=g: a[g * every : (g + 1) * every]
+        xs = {"p": jax.tree.map(sl, params["layers"])}
+        if mode.startswith("decode"):
+            xs["cache"] = jax.tree.map(sl, ssm_caches)
+
+        def body(h, x):
+            h, new_cache = _ssm_layer(cfg, x["p"], h, x.get("cache"), mode)
+            return h, new_cache, MoEAux(jnp.zeros(()), jnp.zeros(()), jnp.zeros(()))
+
+        h, aux, caches_g = _scan_stack(cfg, body, h, xs, mode)
+        aux_total = MoEAux(*(a + b for a, b in zip(aux_total, aux)))
+        if caches_g is not None:
+            new_ssm.append(caches_g)
+
+        # shared attention block (weights shared; per-invocation cache)
+        a_cache = (
+            jax.tree.map(lambda a, g=g: a[g], attn_caches)
+            if attn_caches is not None else None
+        )
+        window = jnp.int32(s_ref + 1)
+        theta = jnp.float32(cfg.rope_theta)
+        cb = params["bangkv_codebooks"][g] if mode == "decode_bangkv" else None
+        h, a_new, aux = _dense_layer(
+            cfg, params["shared_attn"], h, window, theta, a_cache, mode,
+            codebooks=cb,
+        )
+        aux_total = MoEAux(*(a + b for a, b in zip(aux_total, aux)))
+        if a_new is not None:
+            new_attn.append(a_new)
+
+    caches_out = None
+    if new_ssm:
+        ssm_stacked = jax.tree.map(lambda *cs: jnp.concatenate(cs), *new_ssm)
+        attn_stacked = (
+            jax.tree.map(lambda *cs: jnp.stack(cs), *new_attn) if new_attn else None
+        )
+        caches_out = (ssm_stacked, attn_stacked)
+    return h, aux_total, caches_out
+
+
+def encoder_stack(cfg: ModelConfig, params, mem: Array):
+    """Whisper encoder: bidirectional attention over frame embeddings."""
+    enc = params["encoder"]
+    S = mem.shape[1]
+    xs = {"p": enc["layers"]}
+
+    def body(h, x):
+        p = x["p"]
+        z = norm(h, p["attn_norm"], cfg.norm_kind, cfg.norm_eps)
+        y, _ = attention_block(
+            p["attn"], z,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            rope_theta=cfg.rope_theta, attn_chunk=_pick_chunk(S, cfg.attn_chunk),
+            window=S + 1, causal=False,
+        )
+        h = h + y
+        z = norm(h, p["ffn_norm"], cfg.norm_kind, cfg.norm_eps)
+        return h + swiglu(p["ffn"], z), None, MoEAux(jnp.zeros(()), jnp.zeros(()), jnp.zeros(()))
+
+    h, _, _ = _scan_stack(cfg, body, mem, xs, mode="encode")
+    return norm(h, enc["final_norm"], cfg.norm_kind, cfg.norm_eps)
+
+
+def cross_kv(cfg: ModelConfig, params, memory: Array):
+    """Precompute per-layer cross-attention K/V from encoder memory."""
+    B, M, _ = memory.shape
+
+    def per_layer(p):
+        k = (memory @ p["cross"]["wk"]).reshape(B, M, cfg.n_kv_heads, cfg.head_dim)
+        v = (memory @ p["cross"]["wv"]).reshape(B, M, cfg.n_kv_heads, cfg.head_dim)
+        return k, v
+
+    return jax.vmap(per_layer)(params["layers"])  # (L, B, M, Hkv, hd) x2
+
+
+# ---------------------------------------------------------------------------
+# Model API
+# ---------------------------------------------------------------------------
+
+class LM:
+    """Pure-function model wrapper for one architecture config."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key: Array) -> dict:
+        return init_params(self.cfg, key)
+
+    # ---------------------------------------------------------------- embed
+    def _embed_inputs(self, params, tokens: Array, frontend: Array | None):
+        cfg = self.cfg
+        h = embed(tokens, params["embed"])
+        if cfg.frontend == "vision_stub" and frontend is not None:
+            h = jnp.concatenate([frontend.astype(h.dtype), h], axis=1)
+        return constrain(h, DP_AXES, None, None)
+
+    def _logits_head(self, params, h: Array) -> Array:
+        table = params["embed"] if self.cfg.tie_embeddings else params["lm_head"].T
+        return jnp.einsum("bsd,vd->bsv", h.astype(jnp.float32), table.astype(jnp.float32))
+
+    # ----------------------------------------------------------------- train
+    def loss(self, params, batch: dict) -> tuple[Array, dict]:
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        frontend = batch.get("frontend")
+        if cfg.arch_kind == "encdec":
+            memory = encoder_stack(cfg, params, frontend.astype(jnp.dtype(cfg.dtype)))
+            ck, cv = cross_kv(cfg, params, memory)
+            h = embed(tokens, params["embed"])
+            h, aux, _ = decoder_stack(cfg, params, h, mode="train", cross_mem=(ck, cv))
+        else:
+            h = self._embed_inputs(params, tokens, frontend)
+            h, aux, _ = decoder_stack(cfg, params, h, mode="train")
+        h = norm(h, params["final_norm"], cfg.norm_kind, cfg.norm_eps)
+        if cfg.frontend == "vision_stub" and frontend is not None:
+            h = h[:, frontend.shape[1]:]
+        table = params["embed"] if cfg.tie_embeddings else params["lm_head"].T
+        ce = unembed_chunked(h, table, labels, _pick_chunk(h.shape[1], cfg.loss_chunk))
+        loss = ce + 0.01 * aux.load_balance + 0.001 * aux.router_z
+        metrics = {
+            "ce": ce,
+            "load_balance": aux.load_balance,
+            "router_z": aux.router_z,
+            "dropped_frac": aux.dropped_frac,
+        }
+        return loss, metrics
+
+    # --------------------------------------------------------------- prefill
+    def prefill(self, params, batch: dict) -> tuple[Array, Any]:
+        """Forward the prompt; return last-position logits + decode caches."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        frontend = batch.get("frontend")
+        if cfg.arch_kind == "encdec":
+            memory = encoder_stack(cfg, params, frontend.astype(jnp.dtype(cfg.dtype)))
+            cm = cross_kv(cfg, params, memory)
+            h = embed(tokens, params["embed"])
+            h, _, self_caches = decoder_stack(cfg, params, h, mode="prefill", cross_mem=cm)
+            caches = (self_caches, cm)
+        else:
+            h = self._embed_inputs(params, tokens, frontend)
+            h, _, caches = decoder_stack(cfg, params, h, mode="prefill")
+        h = norm(h, params["final_norm"], cfg.norm_kind, cfg.norm_eps)
+        logits = self._logits_head(params, h[:, -1:])
+        return logits, caches
+
+    # ---------------------------------------------------------------- decode
+    def decode_step(self, params, caches, tokens: Array, *, bangkv: bool = False):
+        """One decode step. tokens (B, 1). Returns (logits, new_caches)."""
+        cfg = self.cfg
+        mode = "decode_bangkv" if bangkv else "decode"
+        h = embed(tokens, params["embed"])
+        if cfg.arch_kind == "encdec":
+            self_caches, cross = caches
+            h, _, new_caches = decoder_stack(
+                cfg, params, h, mode=mode, caches=self_caches, cross_mem=cross
+            )
+            new_caches = (new_caches, cross)
+        else:
+            h, _, new_caches = decoder_stack(cfg, params, h, mode=mode, caches=caches)
+        h = norm(h, params["final_norm"], cfg.norm_kind, cfg.norm_eps)
+        logits = self._logits_head(params, h)
+        return logits, new_caches
+
+    # ----------------------------------------------------------- cache init
+    def init_decode_caches(self, batch: int, s_max: int, *, bangkv: bool = False,
+                           fill: int = 0, memory_len: int = 0):
+        """Zero caches at fill level `fill` (dry-run stands these up as specs)."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        L = cfg.n_layers
+        idx = jnp.full((L,), fill, jnp.int32)
+
+        def kv(s):
+            return KVCache(
+                k=jnp.zeros((L, batch, s, cfg.n_kv_heads, cfg.head_dim), dtype),
+                v=jnp.zeros((L, batch, s, cfg.n_kv_heads, cfg.head_dim), dtype),
+                index=idx,
+            )
+
+        def bang(s, n):
+            return bkv.BangKVCache(
+                codes=jnp.zeros((n, batch, s, cfg.n_kv_heads, cfg.bangkv_m), jnp.uint8),
+                k=jnp.zeros((n, batch, s, cfg.n_kv_heads, cfg.head_dim), dtype),
+                v=jnp.zeros((n, batch, s, cfg.n_kv_heads, cfg.head_dim), dtype),
+                index=jnp.full((n,), fill, jnp.int32),
+            )
+
+        def ssm(n):
+            base = ssm_cache_init(
+                batch, None, expand=cfg.ssm_expand, d_model=cfg.d_model,
+                state=cfg.ssm_state, conv=cfg.ssm_conv,
+                head_dim=cfg.ssm_head_dim, groups=cfg.ssm_groups,
+            )
+            return jax.tree.map(lambda a: jnp.zeros((n, *a.shape), a.dtype), base)
+
+        if cfg.family == "ssm":
+            return ssm(L)
+        if cfg.family == "hybrid":
+            n_groups = L // cfg.hybrid_attn_every
+            attn = (
+                bang(s_max, n_groups) if bangkv
+                else KVCache(
+                    k=jnp.zeros((n_groups, batch, s_max, cfg.n_kv_heads, cfg.head_dim), dtype),
+                    v=jnp.zeros((n_groups, batch, s_max, cfg.n_kv_heads, cfg.head_dim), dtype),
+                    index=jnp.full((n_groups,), fill, jnp.int32),
+                )
+            )
+            return (ssm(L), attn)
+        if cfg.arch_kind == "encdec":
+            m = memory_len or cfg.frontend_len
+            cross = (
+                jnp.zeros((L, batch, m, cfg.n_kv_heads, cfg.head_dim), dtype),
+                jnp.zeros((L, batch, m, cfg.n_kv_heads, cfg.head_dim), dtype),
+            )
+            self_c = bang(s_max, L) if bangkv else kv(s_max)
+            return (self_c, cross)
+        return bang(s_max, L) if bangkv else kv(s_max)

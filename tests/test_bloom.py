@@ -1,0 +1,59 @@
+"""Bloom filter properties (paper §4.4): no false negatives, bounded FPR."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bloom
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    ids=st.lists(st.integers(0, 2**31 - 2), min_size=1, max_size=64),
+    z=st.sampled_from([512, 4096, 399_887]),
+)
+def test_no_false_negatives(ids, z):
+    ids_a = jnp.asarray(np.array(ids, np.int32)[None, :])
+    filt = bloom.bloom_set(bloom.bloom_init(1, z), ids_a)
+    assert bool(jnp.all(bloom.bloom_query(filt, ids_a)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_query_and_set_fresh_semantics(seed):
+    rng = np.random.default_rng(seed)
+    a = rng.choice(10_000, size=24, replace=False).astype(np.int32)
+    first, second = a[:12][None], a[:12][None]
+    filt = bloom.bloom_init(1, 8192)
+    fresh1, filt = bloom.bloom_query_and_set(filt, jnp.asarray(first))
+    fresh2, filt = bloom.bloom_query_and_set(filt, jnp.asarray(second))
+    assert bool(jnp.all(fresh1))          # never-seen ids are fresh
+    assert not bool(jnp.any(fresh2))      # re-inserted ids are filtered
+
+
+def test_false_positive_rate_reasonable():
+    rng = np.random.default_rng(1)
+    inserted = rng.choice(2**30, size=400, replace=False).astype(np.int32)
+    others = (inserted[None] + 2**30).astype(np.int32)  # disjoint
+    z = 8192
+    filt = bloom.bloom_set(bloom.bloom_init(1, z), jnp.asarray(inserted[None]))
+    fp = float(jnp.mean(bloom.bloom_query(filt, jnp.asarray(others)).astype(jnp.float32)))
+    # ~ (1 - e^{-kn/z})^k with k=2, n=400, z=8192 -> ~0.9%; allow slack
+    assert fp < 0.05
+
+
+def test_valid_mask_blocks_insertion():
+    ids = jnp.asarray([[5, 6]], dtype=jnp.int32)
+    valid = jnp.asarray([[True, False]])
+    filt = bloom.bloom_set(bloom.bloom_init(1, 1024), ids, valid)
+    q = bloom.bloom_query(filt, ids)
+    assert bool(q[0, 0]) and not bool(q[0, 1])
+
+
+def test_fnv1a_reference_value():
+    """FNV-1a over LE bytes of 0x00000000 must match the canonical constant."""
+    h = bloom._fnv1a_u32(jnp.asarray([0], jnp.int32), bloom.FNV_OFFSET_BASIS)
+    # hand-computed: 4 zero bytes folded into offset basis (mod 2^32)
+    expect = 2166136261
+    for _ in range(4):
+        expect = ((expect ^ 0) * 16777619) % (1 << 32)
+    assert int(np.uint32(h[0])) == expect

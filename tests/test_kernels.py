@@ -1,0 +1,86 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs ref.py oracles."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.worklist import Worklist
+
+
+@pytest.mark.parametrize("B,R,m", [(1, 4, 4), (3, 17, 9), (8, 64, 74), (5, 31, 16)])
+@pytest.mark.parametrize("variant", ["onehot", "gather"])
+def test_pq_adc(B, R, m, variant, rng):
+    from repro.kernels.pq_adc import ops
+
+    table = jnp.asarray(rng.standard_normal((B, m, 256)).astype(np.float32) ** 2)
+    codes = jnp.asarray(rng.integers(0, 256, (B, R, m)).astype(np.int32))
+    valid = jnp.asarray(rng.random((B, R)) > 0.25)
+    out = ops.adc(table, codes, valid, variant=variant)
+    ref = ops.adc_ref(table, codes, valid)
+    fin = np.isfinite(np.asarray(ref))
+    np.testing.assert_allclose(np.asarray(out)[fin], np.asarray(ref)[fin], rtol=1e-5)
+    assert np.array_equal(np.isinf(np.asarray(out)), ~fin)
+
+
+@pytest.mark.parametrize("B,m,dsub", [(1, 1, 4), (7, 6, 11), (13, 8, 16), (4, 74, 2)])
+def test_pq_table(B, m, dsub, rng):
+    from repro.core.pq import PQCodec
+    from repro.kernels.pq_table import ops
+
+    cb = jnp.asarray(rng.standard_normal((m, 256, dsub)).astype(np.float32))
+    q = jnp.asarray(rng.standard_normal((B, m * dsub)).astype(np.float32))
+    out = ops.build_dist_table(PQCodec(cb), q)
+    ref = ops.dist_table_ref(q.reshape(B, m, dsub), cb)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("B,n", [(1, 2), (5, 16), (9, 23), (3, 64), (2, 100)])
+def test_bitonic_sort(B, n, rng):
+    from repro.kernels.bitonic import ops
+
+    d = jnp.asarray(rng.standard_normal((B, n)).astype(np.float32))
+    # duplicate keys exercise the (dist, id) tie-break
+    d = jnp.concatenate([d[:, : n // 2], d[:, : n - n // 2]], axis=-1)
+    i = jnp.asarray(rng.integers(0, 10_000, (B, n)).astype(np.int32))
+    sd, si = ops.sort_kv(d, i)
+    rd, ri = ops.sort_kv_ref(d, i)
+    np.testing.assert_allclose(np.asarray(sd), np.asarray(rd))
+    np.testing.assert_array_equal(np.asarray(si), np.asarray(ri))
+
+
+@pytest.mark.parametrize("B,t,R", [(1, 4, 4), (6, 16, 12), (3, 64, 64), (2, 33, 7)])
+def test_bitonic_merge(B, t, R, rng):
+    from repro.kernels.bitonic import ops
+
+    wl_d = jnp.sort(jnp.asarray(rng.standard_normal((B, t)).astype(np.float32)), axis=-1)
+    wl_i = jnp.asarray(rng.integers(0, 1000, (B, t)).astype(np.int32))
+    wl_v = jnp.asarray(rng.random((B, t)) > 0.5)
+    cd = jnp.sort(jnp.asarray(rng.standard_normal((B, R)).astype(np.float32)), axis=-1)
+    ci = jnp.asarray(rng.integers(1000, 2000, (B, R)).astype(np.int32))
+    out = ops.merge_worklist(Worklist(wl_d, wl_i, wl_v), cd, ci)
+    rd, ri, rv = ops.merge_ref(wl_d, wl_i, wl_v, cd, ci, t)
+    np.testing.assert_allclose(np.asarray(out.dists), np.asarray(rd))
+    np.testing.assert_array_equal(np.asarray(out.ids), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(out.visited), np.asarray(rv))
+
+
+@pytest.mark.parametrize("B,C,d", [(1, 1, 8), (5, 19, 37), (4, 200, 128), (2, 7, 129)])
+def test_rerank_l2(B, C, d, rng):
+    from repro.kernels.rerank_l2 import ops
+
+    q = jnp.asarray(rng.standard_normal((B, d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, C, d)).astype(np.float32))
+    out = ops.exact_sq_dists(q, v)
+    ref = ops.exact_sq_dists_ref(q, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_kernel_search_path_matches_reference_path(small_ann_index, rng):
+    """End-to-end: use_kernels=True returns bit-identical neighbour ids."""
+    from repro.core import SearchConfig
+
+    data, idx = small_ann_index
+    queries = rng.standard_normal((8, data.shape[1])).astype(np.float32)
+    ids_k, _ = idx.search(queries, 10, cfg=SearchConfig(t=32, bloom_z=4096, use_kernels=True))
+    ids_r, _ = idx.search(queries, 10, cfg=SearchConfig(t=32, bloom_z=4096, use_kernels=False))
+    np.testing.assert_array_equal(np.asarray(ids_k), np.asarray(ids_r))

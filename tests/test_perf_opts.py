@@ -1,0 +1,49 @@
+"""Beyond-paper perf optimizations must preserve numerics (EXPERIMENTS §Perf)."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.models import retrieval_attention as bkv
+from repro.models.attention import chunked_causal_attention
+
+
+def test_banded_local_attention_matches_masked(rng):
+    B, S, H, Hkv, hd = 2, 64, 4, 2, 8
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, hd)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, hd)).astype(np.float32))
+    w, c = 12, 8
+    full = chunked_causal_attention(q, k, v, chunk=c, window=w)
+    band = min(S, -(-(w + c) // c) * c)
+    banded = chunked_causal_attention(q, k, v, chunk=c, window=w, band=band)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(banded), rtol=1e-5, atol=1e-5)
+
+
+def test_bf16_scores_close_to_f32(rng):
+    B, S, H, Hkv, hd = 2, 32, 4, 2, 8
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, hd)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, hd)).astype(np.float32))
+    full = chunked_causal_attention(q, k, v, chunk=8, window=S + 1)
+    bf = chunked_causal_attention(q, k, v, chunk=8, window=S + 1, bf16_scores=True)
+    assert float(np.abs(np.asarray(bf) - np.asarray(full)).max()) < 0.1
+
+
+def test_hier_topk_and_adc_lite_match_flat(rng):
+    B, S, Hkv, G, hd, m = 1, 64, 2, 2, 16, 4
+    H = Hkv * G
+    fill = 60
+    k = rng.standard_normal((B, S, Hkv, hd)).astype(np.float32)
+    v = rng.standard_normal((B, S, Hkv, hd)).astype(np.float32)
+    k[:, fill:] = 0
+    v[:, fill:] = 0
+    kj, vj = jnp.asarray(k), jnp.asarray(v)
+    cb = bkv.fit_codebooks(kj[:, :fill], m, iters=20)
+    cache = bkv.BangKVCache(
+        codes=bkv.encode_keys(cb, kj), k=kj, v=vj, index=jnp.int32(fill)
+    )
+    q = jnp.asarray(rng.standard_normal((B, 1, H, hd)).astype(np.float32))
+    flat = bkv.bangkv_decode_attention(cb, q, cache, top_l=4, window=8)
+    hier = bkv.bangkv_decode_attention(
+        cb, q, cache, top_l=4, window=8, hier_topk=True, adc_lite=True
+    )
+    assert float(np.abs(np.asarray(flat) - np.asarray(hier)).max()) < 0.05

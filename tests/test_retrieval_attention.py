@@ -1,0 +1,101 @@
+"""BANG-KV retrieval attention: the paper's pipeline inside decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import retrieval_attention as bkv
+from repro.models.attention import KVCache, decode_attention
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mk_cache(rng, B, S, Hkv, hd, m, fill):
+    k = rng.standard_normal((B, S, Hkv, hd)).astype(np.float32)
+    v = rng.standard_normal((B, S, Hkv, hd)).astype(np.float32)
+    k[:, fill:] = 0
+    v[:, fill:] = 0
+    return jnp.asarray(k), jnp.asarray(v)
+
+
+def test_encode_keys_roundtrip_when_codebook_contains_keys(rng):
+    """With <=256 distinct keys per head, fitted codebooks quantise exactly."""
+    B, S, Hkv, hd, m = 1, 24, 2, 16, 4
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, hd)).astype(np.float32))
+    cb = bkv.fit_codebooks(k, m, iters=30)
+    codes = bkv.encode_keys(cb, k)
+    assert codes.shape == (B, S, Hkv, m)
+    # reconstruct and compare
+    dsub = hd // m
+    ks = np.asarray(k).reshape(B, S, Hkv, m, dsub)
+    cbn = np.asarray(cb)
+    rec = np.stack(
+        [
+            cbn[h, j, np.asarray(codes)[0, :, h, j], :]
+            for h in range(Hkv)
+            for j in range(m)
+        ],
+        axis=1,
+    ).reshape(S, Hkv, m, dsub)
+    np.testing.assert_allclose(rec, ks[0], atol=2e-2, rtol=2e-2)
+
+
+def test_bangkv_matches_exact_attention_with_perfect_codebooks(rng):
+    """When PQ is lossless and L+window covers history, BANG-KV == exact."""
+    B, S, Hkv, G, hd, m = 1, 32, 2, 2, 16, 4
+    H = Hkv * G
+    fill = 28
+    window, top_l = 8, fill  # retrieval + window cover everything
+    k, v = _mk_cache(np.random.default_rng(3), B, S, Hkv, hd, m, fill)
+    cb = bkv.fit_codebooks(k[:, :fill], m, iters=40)
+    codes = bkv.encode_keys(cb, k)
+    cache = bkv.BangKVCache(codes=codes, k=k, v=v, index=jnp.int32(fill))
+    q = jnp.asarray(np.random.default_rng(4).standard_normal((B, 1, H, hd)).astype(np.float32))
+
+    out_bang = bkv.bangkv_decode_attention(cb, q, cache, top_l=top_l, window=window)
+    out_exact = decode_attention(
+        q, KVCache(k=k, v=v, index=jnp.int32(fill)), window=jnp.int32(S + 1)
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_bang), np.asarray(out_exact), rtol=3e-3, atol=3e-3
+    )
+
+
+def test_bangkv_retrieval_finds_planted_heavy_key(rng):
+    """A key exactly aligned with q outside the window must be retrieved."""
+    B, S, Hkv, G, hd, m = 1, 64, 1, 1, 16, 4
+    fill = 60
+    rng = np.random.default_rng(5)
+    k = 0.01 * rng.standard_normal((B, S, Hkv, hd)).astype(np.float32)
+    v = rng.standard_normal((B, S, Hkv, hd)).astype(np.float32)
+    q = rng.standard_normal((B, 1, 1, hd)).astype(np.float32)
+    planted = 7  # far outside the window
+    k[0, planted, 0] = 10.0 * q[0, 0, 0] / np.linalg.norm(q[0, 0, 0])
+    k[:, fill:] = 0
+    kj, vj, qj = jnp.asarray(k), jnp.asarray(v), jnp.asarray(q)
+    cb = bkv.fit_codebooks(kj[:, :fill], m, iters=40)
+    cache = bkv.BangKVCache(codes=bkv.encode_keys(cb, kj), k=kj, v=vj, index=jnp.int32(fill))
+    out = bkv.bangkv_decode_attention(cb, qj, cache, top_l=4, window=8)
+    # the planted key dominates softmax -> output ~= v[planted]
+    np.testing.assert_allclose(
+        np.asarray(out)[0, 0, 0], v[0, planted, 0], rtol=0.15, atol=0.15
+    )
+
+
+def test_bangkv_cache_append(rng):
+    B, S, Hkv, hd, m = 2, 16, 2, 16, 4
+    cache = bkv.bangkv_init(B, S, Hkv, hd, m, dtype=jnp.float32)
+    cb = jnp.asarray(np.random.default_rng(0).standard_normal((Hkv, m, 256, hd // m)).astype(np.float32))
+    p = {
+        "wq": jnp.eye(hd * Hkv * 2, Hkv * 2 * hd, dtype=jnp.float32)[: Hkv * 2 * hd],
+        "wk": jnp.eye(Hkv * 2 * hd, Hkv * hd, dtype=jnp.float32),
+        "wv": jnp.eye(Hkv * 2 * hd, Hkv * hd, dtype=jnp.float32),
+        "wo": jnp.eye(Hkv * 2 * hd, Hkv * 2 * hd, dtype=jnp.float32),
+    }
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((B, 1, Hkv * 2 * hd)).astype(np.float32))
+    y, new_cache = bkv.bangkv_attention_block(
+        p, cb, x, cache, n_heads=Hkv * 2, n_kv_heads=Hkv, head_dim=hd,
+        rope_theta=1e4, top_l=4, window=4,
+    )
+    assert int(new_cache.index) == 1
+    assert y.shape == x.shape
+    assert bool(jnp.any(new_cache.k[:, 0] != 0))

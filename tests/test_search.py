@@ -1,0 +1,102 @@
+"""End-to-end BANG search behaviour (the paper's claims as tests)."""
+import numpy as np
+import pytest
+
+from repro.core import BangIndex, SearchConfig, brute_force_knn, recall_at_k
+from repro.core.search import SearchConfig as SC, search_exact
+from repro.core.vamana import build_fully_connected
+from repro.data import gaussian_mixture, uniform_queries
+
+
+@pytest.fixture(scope="module")
+def queries(small_ann_index):
+    data, _ = small_ann_index
+    return uniform_queries(data, 24, seed=7)
+
+
+def test_recall_at_headline_point(small_ann_index, queries):
+    """Paper headline: high recall (>=0.9) at reasonable worklist size."""
+    data, idx = small_ann_index
+    gt = brute_force_knn(data, queries, 10)
+    ids, _ = idx.search(queries, 10, cfg=SearchConfig(t=64, bloom_z=8192))
+    assert recall_at_k(np.asarray(ids), gt) >= 0.9
+
+
+def test_rerank_improves_recall(small_ann_index, queries):
+    """Paper §4.9: re-ranking lifts recall materially."""
+    data, idx = small_ann_index
+    gt = brute_force_knn(data, queries, 10)
+    cfg = SearchConfig(t=48, bloom_z=8192)
+    with_rr, _ = idx.search(queries, 10, cfg=cfg, rerank=True)
+    without_rr, _ = idx.search(queries, 10, cfg=cfg, rerank=False)
+    r_with = recall_at_k(np.asarray(with_rr), gt)
+    r_without = recall_at_k(np.asarray(without_rr), gt)
+    assert r_with > r_without + 0.03
+
+
+def test_base_variant_identical_to_inmem(small_ann_index, queries):
+    """Host-graph (PCIe analogue) and device-graph searches must agree."""
+    data, idx = small_ann_index
+    cfg = SearchConfig(t=32, bloom_z=8192)
+    a, _ = idx.search(queries, 10, variant="base", cfg=cfg)
+    b, _ = idx.search(queries, 10, variant="inmem", cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_exact_variant_beats_pq_no_rerank(small_ann_index, queries):
+    data, idx = small_ann_index
+    gt = brute_force_knn(data, queries, 10)
+    cfg = SearchConfig(t=48, bloom_z=8192)
+    ex, _ = idx.search(queries, 10, variant="exact", cfg=cfg)
+    pq_ids, _ = idx.search(queries, 10, variant="inmem", cfg=cfg, rerank=False)
+    assert recall_at_k(np.asarray(ex), gt) >= recall_at_k(np.asarray(pq_ids), gt)
+
+
+def test_exact_search_on_complete_graph_is_exhaustive(rng):
+    """Exact-distance greedy search on a complete graph with t>=n == brute force."""
+    import jax.numpy as jnp
+
+    n, d = 64, 8
+    data = rng.standard_normal((n, d)).astype(np.float32)
+    q = rng.standard_normal((5, d)).astype(np.float32)
+    g = build_fully_connected(n)
+    res = search_exact(
+        jnp.asarray(q), jnp.asarray(data), jnp.asarray(g.adjacency), g.medoid,
+        SC(t=n, bloom_z=4096, max_iters=2 * n),
+    )
+    gt = brute_force_knn(data, q, 10)
+    found = np.asarray(res.worklist.ids[:, :10])
+    assert recall_at_k(found, gt) == 1.0
+
+
+def test_eager_vs_lazy_selection(small_ann_index, queries):
+    """§4.6 eager candidate selection must not hurt recall materially."""
+    data, idx = small_ann_index
+    gt = brute_force_knn(data, queries, 10)
+    r = {}
+    for eager in (True, False):
+        ids, _ = idx.search(queries, 10, cfg=SearchConfig(t=48, bloom_z=8192, eager=eager))
+        r[eager] = recall_at_k(np.asarray(ids), gt)
+    assert r[True] >= r[False] - 0.02
+
+
+def test_iteration_count_near_worklist_size(small_ann_index, queries):
+    """Paper Fig 10: queries converge in ~1.1x t iterations."""
+    data, idx = small_ann_index
+    t = 48
+    _, _, stats = idx.search(
+        queries, 10, cfg=SearchConfig(t=t, bloom_z=8192), return_stats=True
+    )
+    assert stats.p95_hops <= 1.6 * t       # generous bound for tiny datasets
+    assert stats.mean_hops >= 0.4 * t      # and it genuinely explores
+
+
+def test_larger_t_does_not_reduce_recall(small_ann_index, queries):
+    data, idx = small_ann_index
+    gt = brute_force_knn(data, queries, 10)
+    r = []
+    for t in (16, 48, 96):
+        ids, _ = idx.search(queries, 10, cfg=SearchConfig(t=t, bloom_z=8192))
+        r.append(recall_at_k(np.asarray(ids), gt))
+    assert r[-1] >= r[0] - 1e-9
+    assert r[-1] >= 0.9

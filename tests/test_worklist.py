@@ -1,0 +1,79 @@
+"""Worklist/merge properties (paper §4.7-4.8)."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.worklist import (
+    INVALID_ID,
+    Worklist,
+    first_unvisited,
+    mark_visited,
+    merge_path_reference,
+    merge_worklist,
+    sort_candidates,
+    worklist_init,
+)
+
+finite_f32 = st.floats(-1e6, 1e6, width=32, allow_nan=False)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(finite_f32, min_size=1, max_size=40), st.data())
+def test_merge_keeps_t_smallest_union(dists, data):
+    """Merged worklist == t smallest of (worklist ∪ candidates)."""
+    n1 = data.draw(st.integers(1, len(dists)))
+    d1, d2 = sorted(dists[:n1]), sorted(dists[n1:])
+    t = len(d1)
+    wl = Worklist(
+        dists=jnp.asarray([d1], jnp.float32),
+        ids=jnp.asarray([list(range(t))], jnp.int32),
+        visited=jnp.zeros((1, t), bool),
+    )
+    cd = jnp.asarray([d2], jnp.float32) if d2 else jnp.full((1, 0), np.inf, jnp.float32)
+    ci = jnp.asarray([[100 + i for i in range(len(d2))]], jnp.int32)
+    out = merge_worklist(wl, cd, ci)
+    expect = sorted(d1 + d2)[:t]
+    np.testing.assert_allclose(np.asarray(out.dists[0]), expect, rtol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.lists(finite_f32, min_size=1, max_size=32),
+    st.lists(finite_f32, min_size=1, max_size=32),
+)
+def test_merge_path_equals_sorted_concat(a, b):
+    a, b = sorted(a), sorted(b)
+    d1 = jnp.asarray([a], jnp.float32)
+    i1 = jnp.asarray([list(range(len(a)))], jnp.int32)
+    d2 = jnp.asarray([b], jnp.float32)
+    i2 = jnp.asarray([[1000 + i for i in range(len(b))]], jnp.int32)
+    od, oi = merge_path_reference(d1, i1, d2, i2)
+    # expectation computed from the jnp-roundtripped values (CPU flushes
+    # subnormals to zero; the algorithm must match what the device sees)
+    expect = np.sort(np.concatenate([np.asarray(d1[0]), np.asarray(d2[0])]))
+    np.testing.assert_allclose(np.asarray(od[0]), expect, rtol=1e-6)
+    # the output must be a permutation of the inputs (ids preserved)
+    assert set(np.asarray(oi[0]).tolist()) == set(range(len(a))) | {1000 + i for i in range(len(b))}
+
+
+def test_first_unvisited_and_mark():
+    wl = worklist_init(2, 4)
+    wl = Worklist(
+        dists=jnp.asarray([[0.1, 0.2, 0.3, np.inf], [0.5, 0.6, np.inf, np.inf]], jnp.float32),
+        ids=jnp.asarray([[7, 8, 9, INVALID_ID], [3, 4, INVALID_ID, INVALID_ID]], jnp.int32),
+        visited=jnp.asarray([[True, False, False, True], [True, True, True, True]]),
+    )
+    ids, found = first_unvisited(wl)
+    assert ids[0] == 8 and bool(found[0])
+    assert ids[1] == INVALID_ID and not bool(found[1])
+    wl2 = mark_visited(wl, jnp.asarray([8, INVALID_ID], jnp.int32))
+    assert bool(wl2.visited[0, 1])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(finite_f32, min_size=1, max_size=64))
+def test_sort_candidates_matches_numpy(vals):
+    d = jnp.asarray([vals], jnp.float32)
+    i = jnp.asarray([list(range(len(vals)))], jnp.int32)
+    sd, si = sort_candidates(d, i)
+    np.testing.assert_allclose(np.asarray(sd[0]), np.sort(np.asarray(vals, np.float32)))
