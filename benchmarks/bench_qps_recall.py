@@ -4,14 +4,22 @@ CPU host stands in for the accelerator (numbers are relative, the shape of
 the QPS/recall frontier is the reproduced object). Sweeps the worklist size t
 exactly as the paper does to trace the curve; the brute-force scan is the
 exact baseline every ANNS must beat.
+
+Measured through the runtime subsystem: a warm-up drain through
+`ServePipeline` pays the per-bucket compile once, then the timed drains
+report *steady-state* QPS -- compile time is recorded separately in the
+derived column so the benchmark trajectory measures search, not tracing.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core import SearchConfig, brute_force_knn, recall_at_k
+from repro.runtime import ServePipeline
 
 from .common import bench_dataset, timeit
+
+REPEATS = 3
 
 
 def run(report) -> None:
@@ -26,14 +34,26 @@ def run(report) -> None:
         f"recall=1.000,qps={len(queries)/bf_t:.0f}",
     )
 
+    executor = idx.executor("inmem")
     for t in (16, 32, 64, 96, 128, 152):  # paper sweeps t up to 152
         cfg = SearchConfig(t=t, bloom_z=16384)
-        ids, _ = idx.search(queries, k, variant="inmem", cfg=cfg)
-        r = recall_at_k(np.asarray(ids), gt)
-        wall = timeit(
-            lambda: idx.search(queries, k, variant="inmem", cfg=cfg)[0], repeats=3
-        )
+        pipe = ServePipeline(executor, k=k, cfg=cfg, max_batch=64)
+
+        # Warm-up drain: compiles the (bucket, t, k) executable and gives us
+        # the recall + the compile cost to record alongside.
+        pipe.submit(queries)
+        ids, _, warm = pipe.drain()
+        r = recall_at_k(ids, gt)
+
+        best_qps, best_wall = 0.0, float("inf")
+        for _ in range(REPEATS):
+            pipe.submit(queries)
+            _, _, stats = pipe.drain()
+            if stats.compile_s != 0.0:
+                raise RuntimeError("steady-state drain recompiled")
+            best_qps = max(best_qps, stats.qps)
+            best_wall = min(best_wall, stats.wall_s)
         report(
-            f"fig5_bang_inmem_t{t}", wall / len(queries) * 1e6,
-            f"recall={r:.3f},qps={len(queries)/wall:.0f}",
+            f"fig5_bang_inmem_t{t}", best_wall / len(queries) * 1e6,
+            f"recall={r:.3f},qps={best_qps:.0f},compile_s={warm.compile_s:.2f}",
         )

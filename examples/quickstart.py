@@ -26,7 +26,8 @@ def main() -> None:
         r = recall_at_k(np.asarray(ids), gt)
         print(
             f"  t={t:<4d} recall@10={r:.3f} mean_hops={stats.mean_hops:.0f} "
-            f"qps={stats.qps:.0f} (CPU reference)"
+            f"qps={stats.qps:.0f} compile={stats.compile_s:.1f}s (CPU reference, "
+            "steady-state qps excludes compile)"
         )
 
 

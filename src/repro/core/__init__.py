@@ -6,5 +6,5 @@
 #   rerank             -- exact-distance re-ranking (stage 3, §4.9)
 #   bang               -- BangIndex public API (three-stage pipeline)
 #   distributed        -- pod-scale sharded-graph search (shard_map)
-from .bang import BangIndex, brute_force_knn, recall_at_k  # noqa: F401
+from .bang import BangIndex, SearchStats, brute_force_knn, recall_at_k  # noqa: F401
 from .search import SearchConfig  # noqa: F401

@@ -12,7 +12,6 @@ Variants (paper §5):
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any
 
 import jax
@@ -20,9 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import pq as pqlib
-from . import rerank as rr
-from . import search as searchlib
-from .search import SearchConfig, SearchResult
+from .search import SearchConfig
 from .vamana import VamanaGraph, build_vamana
 
 Array = jax.Array
@@ -33,8 +30,11 @@ class SearchStats:
     n_iters: int
     mean_hops: float
     p95_hops: float
-    wall_s: float
-    qps: float
+    wall_s: float        # steady-state wall time: dispatch -> results ready
+    qps: float           # batch / wall_s (excludes compile)
+    compile_s: float = 0.0  # trace+compile paid by this call (0 on cache hit)
+    batch: int = 0       # true batch size
+    bucket: int = 0      # padded shape bucket the executable was built for
 
 
 @dataclasses.dataclass
@@ -46,6 +46,9 @@ class BangIndex:
     graph: VamanaGraph           # host adjacency (base) / copied to device (inmem)
     data_np: np.ndarray          # host full vectors (base re-rank source)
     data_dev: Array | None = None  # device full vectors (inmem/exact variants)
+    _executors: dict[str, Any] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False,
+    )
 
     # ------------------------------------------------------------------ build
     @classmethod
@@ -80,6 +83,29 @@ class BangIndex:
         return self.codes.shape[0]
 
     # ----------------------------------------------------------------- search
+    def executor(self, variant: str = "inmem"):
+        """The jit-cached SearchExecutor serving this index for `variant`.
+
+        Executors are created lazily and cached per variant; device state
+        (codes, codebooks, adjacency, vectors) is uploaded once and shared —
+        the inmem and exact executors reuse the same device adjacency.
+        """
+        ex = self._executors.get(variant)
+        if ex is None:
+            from repro.runtime.executor import SearchExecutor
+
+            shared_adj = None
+            if variant != "base":
+                for other in self._executors.values():
+                    if other.adjacency_dev is not None:
+                        shared_adj = other.adjacency_dev
+                        break
+            ex = SearchExecutor.from_index(
+                self, variant=variant, adjacency_dev=shared_adj,
+            )
+            self._executors[variant] = ex
+        return ex
+
     def search(
         self,
         queries: np.ndarray | Array,
@@ -91,66 +117,18 @@ class BangIndex:
         cfg: SearchConfig | None = None,
         return_stats: bool = False,
     ) -> tuple[Array, Array] | tuple[Array, Array, SearchStats]:
-        """Batched k-NN search. Returns (ids (B, k), dists (B, k))."""
-        queries = jnp.asarray(queries, jnp.float32)
-        cfg = cfg or SearchConfig(t=max(t, k))
-        t0 = time.perf_counter()
+        """Batched k-NN search. Returns (ids (B, k), dists (B, k)).
 
-        if variant == "exact":
-            assert self.data_dev is not None, "exact variant needs device data"
-            adjacency = jnp.asarray(self.graph.adjacency)
-            res = searchlib.search_exact(
-                queries, self.data_dev, adjacency, self.graph.medoid, cfg
-            )
-            # Exact-distance variant skips the re-rank (§5.2): the worklist
-            # already holds exact distances.
-            ids = res.worklist.ids[:, :k]
-            dists = res.worklist.dists[:, :k]
-        else:
-            # Stage 1: PQDistTable, built once per batch, device-resident.
-            table = pqlib.build_dist_table(self.codec, queries)
-            if variant == "inmem":
-                adjacency = jnp.asarray(self.graph.adjacency)
-                res = searchlib.search_inmem(
-                    queries, table, self.codes, adjacency, self.graph.medoid, cfg
-                )
-            elif variant == "base":
-                res = searchlib.search_base(
-                    queries, table, self.codes, self.graph.adjacency,
-                    self.graph.medoid, cfg,
-                )
-            else:
-                raise ValueError(f"unknown variant {variant!r}")
-
-            if rerank:
-                # Stage 3: exact distances over every expanded candidate.
-                if variant == "base" or self.data_dev is None:
-                    ids, dists = rr.rerank(
-                        queries, res.history_ids, k, data_np=self.data_np,
-                        use_kernels=cfg.use_kernels,
-                    )
-                else:
-                    ids, dists = rr.rerank(
-                        queries, res.history_ids, k, data=self.data_dev,
-                        use_kernels=cfg.use_kernels,
-                    )
-            else:
-                ids = res.worklist.ids[:, :k]
-                dists = res.worklist.dists[:, :k]
-
-        ids = jax.block_until_ready(ids)
-        wall = time.perf_counter() - t0
-        if not return_stats:
-            return ids, dists
-        hops = np.asarray(res.n_hops)
-        stats = SearchStats(
-            n_iters=int(res.n_iters),
-            mean_hops=float(hops.mean()),
-            p95_hops=float(np.percentile(hops, 95)),
-            wall_s=wall,
-            qps=queries.shape[0] / wall,
+        Delegates to the per-variant `SearchExecutor`: the three-stage
+        pipeline (PQ table -> traversal -> re-rank) runs as one compiled
+        executable, cached per query-batch shape bucket, with index state
+        resident on device. Repeated searches with the same
+        (bucket, t, k, variant) never retrace. With `return_stats=True` the
+        stats separate steady-state wall time from compile time.
+        """
+        return self.executor(variant).search(
+            queries, k, t=t, cfg=cfg, rerank=rerank, return_stats=return_stats,
         )
-        return ids, dists, stats
 
 
 def brute_force_knn(data: np.ndarray, queries: np.ndarray, k: int) -> np.ndarray:

@@ -1,1 +1,6 @@
+# Runtime subsystem: resident serving executors + the LM training loop.
+#   executor -- jit-cached, shape-bucketed three-stage search pipeline
+#   serving  -- streaming micro-batch serve loop with double buffering
+from .executor import SearchExecutor, SearchHandle, bucket_size, pad_batch  # noqa: F401
+from .serving import BatchReport, ServePipeline, ServeStats  # noqa: F401
 from .train_loop import TrainLoopConfig, train_loop  # noqa: F401

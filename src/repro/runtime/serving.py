@@ -1,0 +1,186 @@
+"""Streaming serve pipeline: micro-batching + double-buffered dispatch.
+
+The paper's serving loop (§6) keeps the GPU busy by overlapping the CPU-side
+work of the next query batch with the device-side search of the current one.
+`ServePipeline` reproduces that structure on top of `SearchExecutor`:
+
+  * **Queue + micro-batches.** `submit()` enqueues query rows (with arrival
+    timestamps and optional ground truth); `drain()` pops them in arrival
+    order into micro-batches of at most `max_batch` rows.
+  * **Double buffering.** Each drain iteration first *dispatches* batch i+1
+    (host-side bucketing, padding, and — in the `base` variant — the
+    pure_callback adjacency gathers all overlap with the device compute of
+    batch i via JAX async dispatch) and only then *blocks* on batch i.
+  * **Rolling stats.** Per-row latency (enqueue -> results ready), rolling
+    QPS with compile time separated out (steady-state QPS is what the paper
+    reports), and recall@k whenever ground truth was submitted.
+
+Typical use::
+
+    pipe = ServePipeline(index.executor("inmem"), k=10, cfg=cfg, max_batch=128)
+    pipe.submit(queries, gt_ids=gt)            # any number of times
+    ids, dists, stats = pipe.drain()
+    print(stats.qps, stats.p95_ms, stats.mean_recall)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable
+
+import numpy as np
+
+from repro.core.bang import recall_at_k
+from repro.core.search import SearchConfig
+
+from .executor import SearchExecutor, SearchHandle
+
+
+@dataclasses.dataclass
+class BatchReport:
+    """Per-micro-batch report passed to the drain() callback."""
+
+    index: int          # micro-batch ordinal within this drain
+    size: int           # rows in the batch
+    wall_s: float       # dispatch -> results ready for this batch
+    compile_s: float    # compile time this batch paid (0 on cache hit)
+    recall: float | None
+    ids: np.ndarray     # (size, k)
+    dists: np.ndarray   # (size, k)
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Rolling statistics for one drain() window."""
+
+    batches: int
+    queries: int
+    wall_s: float           # first dispatch -> last batch ready (incl. compile)
+    compile_s: float        # total compile time paid inside the window
+    qps: float              # steady-state: queries / (wall_s - compile_s)
+    p50_ms: float           # per-row latency percentiles (enqueue -> ready)
+    p95_ms: float
+    mean_recall: float | None  # mean recall@k over batches with ground truth
+
+
+class ServePipeline:
+    """Drains a query queue through a SearchExecutor with double buffering."""
+
+    def __init__(
+        self,
+        executor: SearchExecutor,
+        *,
+        k: int = 10,
+        t: int = 64,
+        cfg: SearchConfig | None = None,
+        rerank: bool = True,
+        max_batch: int = 128,
+    ) -> None:
+        if max_batch <= 0:
+            raise ValueError("max_batch must be positive")
+        self._ex = executor
+        self._k = k
+        self._cfg = cfg or SearchConfig(t=max(t, k))
+        self._rerank = rerank
+        self._max_batch = max_batch
+        # queue rows: (query row (d,), enqueue timestamp, gt row or None)
+        self._queue: deque = deque()
+        self.last_stats: ServeStats | None = None
+
+    @property
+    def executor(self) -> SearchExecutor:
+        return self._ex
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def submit(self, queries: np.ndarray, gt_ids: np.ndarray | None = None) -> int:
+        """Enqueue queries ((B, d) or (d,)); optional (B, k') ground truth."""
+        q = np.asarray(queries, np.float32)
+        if q.ndim == 1:
+            q = q[None]
+        gt = None if gt_ids is None else np.asarray(gt_ids)
+        if gt is not None and gt.shape[0] != q.shape[0]:
+            raise ValueError("gt_ids must have one row per query")
+        now = time.perf_counter()
+        for i, row in enumerate(q):
+            self._queue.append((row, now, None if gt is None else gt[i]))
+        return q.shape[0]
+
+    def drain(
+        self, on_batch: Callable[[BatchReport], None] | None = None
+    ) -> tuple[np.ndarray, np.ndarray, ServeStats]:
+        """Process every queued query; results aligned to submission order."""
+        n = len(self._queue)
+        k = self._k
+        ids_out = np.full((n, k), -1, np.int32)
+        dists_out = np.full((n, k), np.inf, np.float32)
+        latencies: list[float] = []
+        recalls: list[float] = []
+        batches = 0
+        compile_s = 0.0
+        t_start = time.perf_counter()
+
+        inflight: tuple[list, SearchHandle, int, float] | None = None
+        pos = 0
+        while self._queue or inflight is not None:
+            nxt = None
+            if self._queue:
+                # Host-side work for the next batch (pop, stack, pad, upload,
+                # async dispatch) happens while the previous batch computes.
+                rows = [
+                    self._queue.popleft()
+                    for _ in range(min(self._max_batch, len(self._queue)))
+                ]
+                queries = np.stack([r[0] for r in rows])
+                t_disp = time.perf_counter()
+                handle = self._ex.dispatch(
+                    queries, k, cfg=self._cfg, rerank=self._rerank
+                )
+                nxt = (rows, handle, pos, t_disp)
+                pos += len(rows)
+
+            if inflight is not None:
+                rows, handle, at, t_disp = inflight
+                ids, dists = self._ex.finish(handle)
+                ready = time.perf_counter()
+                ids = np.asarray(ids)
+                dists = np.asarray(dists)
+                ids_out[at : at + len(rows)] = ids
+                dists_out[at : at + len(rows)] = dists
+                latencies.extend((ready - r[1]) * 1e3 for r in rows)
+                compile_s += handle.compile_s
+                # Score whichever rows carry ground truth (a micro-batch may
+                # mix gt and non-gt rows across submit() calls). Truncate to
+                # min(k, gt width) so wide gt doesn't deflate the ratio.
+                gt_idx = [i for i, r in enumerate(rows) if r[2] is not None]
+                rec = None
+                if gt_idx:
+                    gt = np.stack([rows[i][2] for i in gt_idx])
+                    kk = min(ids.shape[1], gt.shape[1])
+                    rec = recall_at_k(ids[gt_idx][:, :kk], gt[:, :kk])
+                    recalls.append(rec)
+                if on_batch is not None:
+                    on_batch(BatchReport(
+                        index=batches, size=len(rows), wall_s=ready - t_disp,
+                        compile_s=handle.compile_s, recall=rec,
+                        ids=ids, dists=dists,
+                    ))
+                batches += 1
+            inflight = nxt
+
+        wall = time.perf_counter() - t_start
+        steady = max(wall - compile_s, 1e-9)
+        stats = ServeStats(
+            batches=batches,
+            queries=n,
+            wall_s=wall,
+            compile_s=compile_s,
+            qps=n / steady,
+            p50_ms=float(np.percentile(latencies, 50)) if latencies else 0.0,
+            p95_ms=float(np.percentile(latencies, 95)) if latencies else 0.0,
+            mean_recall=float(np.mean(recalls)) if recalls else None,
+        )
+        self.last_stats = stats
+        return ids_out, dists_out, stats

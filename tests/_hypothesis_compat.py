@@ -1,0 +1,148 @@
+"""Minimal stand-in for `hypothesis` on environments where it isn't installed.
+
+Property tests in this repo use a small slice of the hypothesis API:
+`@settings(max_examples=..., deadline=...)`, `@given(...)` with positional or
+keyword strategies, and the strategies `integers`, `floats`, `lists`,
+`sampled_from`, and `data`. This shim reproduces exactly that slice with
+seeded-random example generation (deterministic per test, derived from the
+test's qualified name), so the suite collects and runs on a clean
+environment. When hypothesis *is* installed, test modules import the real
+thing and this file is inert.
+
+Not implemented (by design): shrinking, the example database, assume(),
+reproduce_failure. A failing example prints its seed index via the normal
+assertion traceback; re-running is deterministic.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import os
+import zlib
+from types import SimpleNamespace
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+# Unlike hypothesis, every distinct drawn shape costs an XLA compile here (no
+# example database to amortise it), so the fallback caps per-test examples.
+# Raise for a thorough run: HYPOTHESIS_COMPAT_MAX_EXAMPLES=100 pytest ...
+EXAMPLES_CAP = int(os.environ.get("HYPOTHESIS_COMPAT_MAX_EXAMPLES", "10"))
+
+
+class Strategy:
+    """A value generator: `example(rng)` draws one value."""
+
+    def __init__(self, sample, label=""):
+        self._sample = sample
+        self.label = label
+
+    def example(self, rng: np.random.Generator):
+        return self._sample(rng)
+
+    def __repr__(self):
+        return f"Strategy({self.label})"
+
+
+def _integers(min_value, max_value):
+    return Strategy(
+        lambda rng: int(rng.integers(min_value, int(max_value) + 1)),
+        f"integers({min_value}, {max_value})",
+    )
+
+
+def _floats(min_value, max_value, width=64, allow_nan=None, **_kw):
+    def sample(rng):
+        v = float(rng.uniform(min_value, max_value))
+        return float(np.float32(v)) if width == 32 else v
+
+    return Strategy(sample, f"floats({min_value}, {max_value})")
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return Strategy(
+        lambda rng: elements[int(rng.integers(0, len(elements)))],
+        "sampled_from",
+    )
+
+
+def _lists(elements: Strategy, min_size=0, max_size=10, **_kw):
+    def sample(rng):
+        size = int(rng.integers(min_size, max_size + 1))
+        return [elements.example(rng) for _ in range(size)]
+
+    return Strategy(sample, "lists")
+
+
+class _DataObject:
+    """Interactive draws inside a test body (`data.draw(strategy)`)."""
+
+    def __init__(self, rng: np.random.Generator):
+        self._rng = rng
+
+    def draw(self, strategy: Strategy, label=None):
+        return strategy.example(self._rng)
+
+
+def _data():
+    return Strategy(lambda rng: _DataObject(rng), "data()")
+
+
+strategies = SimpleNamespace(
+    integers=_integers,
+    floats=_floats,
+    sampled_from=_sampled_from,
+    lists=_lists,
+    data=_data,
+)
+
+
+def settings(*, max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Records max_examples on the (already @given-wrapped) test function."""
+
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*pos_strategies, **kw_strategies):
+    """Run the test once per seeded example instead of once.
+
+    Positional strategies bind to the test's trailing parameters (hypothesis
+    semantics); keyword strategies bind by name. Remaining parameters are
+    left in the wrapper's signature so pytest still injects fixtures.
+    """
+
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        bound: dict[str, Strategy] = dict(kw_strategies)
+        if pos_strategies:
+            tail = params[len(params) - len(pos_strategies):]
+            for p, strat in zip(tail, pos_strategies):
+                bound[p.name] = strat
+        fixture_params = [p for p in params if p.name not in bound]
+        seed0 = zlib.adler32(fn.__qualname__.encode())
+
+        @functools.wraps(fn)
+        def wrapper(**fixture_kwargs):
+            n = min(
+                getattr(wrapper, "_compat_max_examples", DEFAULT_MAX_EXAMPLES),
+                EXAMPLES_CAP,
+            )
+            for i in range(n):
+                rng = np.random.default_rng((seed0, i))
+                drawn = {name: s.example(rng) for name, s in bound.items()}
+                fn(**fixture_kwargs, **drawn)
+
+        # pytest introspects the signature for fixtures: expose only the
+        # non-strategy parameters, and drop __wrapped__ so inspect doesn't
+        # resolve back to the original function.
+        wrapper.__signature__ = sig.replace(parameters=fixture_params)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

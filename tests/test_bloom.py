@@ -1,7 +1,11 @@
 """Bloom filter properties (paper §4.4): no false negatives, bounded FPR."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean environment: seeded-random fallback shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import bloom
 

@@ -67,6 +67,7 @@ def test_elastic_restore_respects_sharding_fn(tmp_path, rng):
     assert sorted(calls) == sorted(["a", "b/c", "d"])
 
 
+@pytest.mark.slow
 def test_train_loop_failure_and_resume(tmp_path):
     import repro.configs as configs
     from repro.runtime import TrainLoopConfig, train_loop

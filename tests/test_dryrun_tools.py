@@ -78,7 +78,7 @@ def test_partitioning_rules_divisibility():
     import os
     # production mesh needs 256 devices; use an abstract mesh instead
     from jax.sharding import AbstractMesh, PartitionSpec as P
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = AbstractMesh((("data", 16), ("model", 16)))
     cfg = configs.get("granite-3-2b")
     specs = param_pspecs(param_specs(cfg), mesh)
     assert specs["embed"] == P(None, "data")      # vocab 49155 odd -> replicated

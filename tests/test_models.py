@@ -9,6 +9,22 @@ from repro.models.transformer import LM
 
 KEY = jax.random.PRNGKey(0)
 ALL_ARCHS = sorted(configs.ARCHS)
+# The big reduced-arch step tests take 10-35s each on CPU; the fast default
+# suite keeps a few cheap representatives and defers the rest to the nightly
+# run (pytest -m "slow or not slow").
+SLOW_ARCHS = {
+    "zamba2-2.7b",
+    "whisper-medium",
+    "llama4-scout-17b-a16e",
+    "gemma3-27b",
+    "internvl2-1b",
+    "mamba2-2.7b",
+    "phi3.5-moe-42b-a6.6b",
+}
+ARCH_PARAMS = [
+    pytest.param(n, marks=pytest.mark.slow) if n in SLOW_ARCHS else n
+    for n in ALL_ARCHS
+]
 
 
 def _batch(cfg, B=2, S=24):
@@ -19,7 +35,7 @@ def _batch(cfg, B=2, S=24):
     return batch
 
 
-@pytest.mark.parametrize("name", ALL_ARCHS)
+@pytest.mark.parametrize("name", ARCH_PARAMS)
 def test_arch_train_step(name):
     cfg = configs.get(name).reduced()
     lm = LM(cfg)
@@ -44,7 +60,7 @@ def test_arch_train_step(name):
     assert improved, f"no step size reduced the loss for {name}"
 
 
-@pytest.mark.parametrize("name", ALL_ARCHS)
+@pytest.mark.parametrize("name", ARCH_PARAMS)
 def test_arch_prefill_decode_consistency(name):
     """decode(prefill(x[:s])) logits == prefill(x[:s+1]) last logits."""
     cfg = configs.get(name).reduced()

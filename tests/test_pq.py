@@ -1,7 +1,11 @@
 """PQ codec invariants (paper §2.3, §4.2, §4.5)."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean environment: seeded-random fallback shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import pq
 

@@ -1,7 +1,11 @@
 """Worklist/merge properties (paper §4.7-4.8)."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean environment: seeded-random fallback shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.worklist import (
     INVALID_ID,
