@@ -1,9 +1,20 @@
-"""Paper Fig 5/7/8: throughput (QPS) vs recall, BANG vs brute-force baseline.
+"""Paper Fig 5/7/8: throughput (QPS) vs recall, BANG vs brute-force baseline,
+plus the mesh-sharded serving sweep (the billion-scale regime's shape).
 
 CPU host stands in for the accelerator (numbers are relative, the shape of
-the QPS/recall frontier is the reproduced object). Sweeps the worklist size t
-exactly as the paper does to trace the curve; the brute-force scan is the
-exact baseline every ANNS must beat.
+the QPS/recall frontier is the reproduced object). Two sweeps:
+
+  * **Worklist sweep** (single device): t in 16..152 exactly as the paper
+    does to trace the QPS/recall curve; the brute-force scan is the exact
+    baseline every ANNS must beat.
+  * **Device sweep** (sharded): the same serving workload on 1/2/4/8 fake
+    host devices (`XLA_FLAGS=--xla_force_host_platform_device_count`, one
+    subprocess per count because the device count locks at backend init),
+    index state sharded over the `model` axis via `ShardedSearchExecutor`.
+    Each row reports steady-state QPS plus the frontier exchange the mesh
+    pays per hop (`bytes_hop` = logical psum payload, `ring` = estimated
+    per-device wire bytes of a ring all-reduce) -- the O(frontier) link
+    traffic that is the paper's central claim (§4.3).
 
 Measured through the runtime subsystem: a warm-up drain through
 `ServePipeline` pays the per-bucket compile once, then the timed drains
@@ -11,6 +22,10 @@ report *steady-state* QPS -- compile time is recorded separately in the
 derived column so the benchmark trajectory measures search, not tracing.
 """
 from __future__ import annotations
+
+import os
+import subprocess
+import sys
 
 import numpy as np
 
@@ -20,9 +35,32 @@ from repro.runtime import ServePipeline
 from .common import bench_dataset, timeit
 
 REPEATS = 3
+SHARDED_DEVICE_COUNTS = (1, 2, 4, 8)
+SHARDED_T = 64
+
+
+def _steady_state(pipe: ServePipeline, queries, gt):
+    """Warm-up drain (compile + recall), then best-of-REPEATS steady drains."""
+    pipe.submit(queries)
+    ids, _, warm = pipe.drain()
+    r = recall_at_k(ids, gt)
+    best_qps, best_wall = 0.0, float("inf")
+    for _ in range(REPEATS):
+        pipe.submit(queries)
+        _, _, stats = pipe.drain()
+        if stats.compile_s != 0.0:
+            raise RuntimeError("steady-state drain recompiled")
+        best_qps = max(best_qps, stats.qps)
+        best_wall = min(best_wall, stats.wall_s)
+    return r, best_qps, best_wall, warm
 
 
 def run(report) -> None:
+    _worklist_sweep(report)
+    _device_sweep(report)
+
+
+def _worklist_sweep(report) -> None:
     data, queries, idx = bench_dataset()
     k = 10
     gt = brute_force_knn(data, queries, k)
@@ -38,22 +76,75 @@ def run(report) -> None:
     for t in (16, 32, 64, 96, 128, 152):  # paper sweeps t up to 152
         cfg = SearchConfig(t=t, bloom_z=16384)
         pipe = ServePipeline(executor, k=k, cfg=cfg, max_batch=64)
-
-        # Warm-up drain: compiles the (bucket, t, k) executable and gives us
-        # the recall + the compile cost to record alongside.
-        pipe.submit(queries)
-        ids, _, warm = pipe.drain()
-        r = recall_at_k(ids, gt)
-
-        best_qps, best_wall = 0.0, float("inf")
-        for _ in range(REPEATS):
-            pipe.submit(queries)
-            _, _, stats = pipe.drain()
-            if stats.compile_s != 0.0:
-                raise RuntimeError("steady-state drain recompiled")
-            best_qps = max(best_qps, stats.qps)
-            best_wall = min(best_wall, stats.wall_s)
+        r, best_qps, best_wall, warm = _steady_state(pipe, queries, gt)
         report(
             f"fig5_bang_inmem_t{t}", best_wall / len(queries) * 1e6,
             f"recall={r:.3f},qps={best_qps:.0f},compile_s={warm.compile_s:.2f}",
         )
+
+
+def _device_sweep(report) -> None:
+    """One subprocess per forced device count (jax locks it at backend init)."""
+    for devices in SHARDED_DEVICE_COUNTS:
+        env = dict(os.environ)
+        # Append (not overwrite): user XLA tuning flags must apply to both
+        # sweeps or the device-scaling comparison is skewed.
+        env["XLA_FLAGS"] = (
+            env.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={devices}"
+        ).strip()
+        env["PYTHONPATH"] = env.get("PYTHONPATH", "src") or "src"
+        try:
+            out = subprocess.run(
+                [sys.executable, "-m", "benchmarks.bench_qps_recall",
+                 "--sharded-worker", str(devices)],
+                env=env, capture_output=True, text=True, timeout=1800,
+            )
+        except subprocess.TimeoutExpired:
+            report(f"fig9_sharded_d{devices}", 0.0, "error=worker timeout")
+            continue
+        if out.returncode != 0:
+            err_lines = (out.stderr or "").strip().splitlines()
+            err = err_lines[-1][:80] if err_lines else "unknown"
+            report(f"fig9_sharded_d{devices}", 0.0, f"error={err}")
+            continue
+        for line in out.stdout.splitlines():
+            if line.startswith("ROW,"):
+                _, name, us, derived = line.split(",", 3)
+                report(name, float(us), derived)
+
+
+def _sharded_worker(devices: int) -> None:
+    """Child process body: serve the bench workload on a forced-device mesh."""
+    import jax
+
+    from repro.compat import make_mesh
+    from repro.runtime import ShardedSearchExecutor
+
+    assert len(jax.devices()) == devices, jax.devices()
+    data, queries, idx = bench_dataset()
+    k = 10
+    gt = brute_force_knn(data, queries, k)
+    # All devices on `model`: every added device grows the servable graph --
+    # the capability this sweep exists to measure.
+    mesh = make_mesh((1, devices), ("data", "model"))
+    ex = ShardedSearchExecutor.from_index(idx, mesh)
+    cfg = SearchConfig(t=SHARDED_T, bloom_z=16384)
+    pipe = ServePipeline(ex, k=k, cfg=cfg, max_batch=64)
+    r, best_qps, best_wall, warm = _steady_state(pipe, queries, gt)
+    xb = ex.exchange_bytes_per_hop(64)
+    print(
+        f"ROW,fig9_sharded_d{devices},{best_wall / len(queries) * 1e6:.1f},"
+        f"recall={r:.3f},qps={best_qps:.0f},devices={devices},"
+        f"bytes_hop={xb['payload_bytes']},ring={xb['ring_bytes_per_device']},"
+        f"compile_s={warm.compile_s:.2f}",
+        flush=True,
+    )
+
+
+if __name__ == "__main__":
+    if len(sys.argv) == 3 and sys.argv[1] == "--sharded-worker":
+        _sharded_worker(int(sys.argv[2]))
+    else:
+        print("usage: python -m benchmarks.run qps_recall", file=sys.stderr)
+        sys.exit(2)

@@ -9,8 +9,13 @@ steady-state search time.
 
 `--variant base` keeps the graph behind a host callback -- the paper's
 CPU-side graph service; `--variant inmem`/`exact` are the §5 variants.
+`--variant sharded --devices N` serves the index sharded over an N-device
+("model"-axis) mesh -- the graph-bigger-than-one-device regime; on a CPU
+host it forces N fake devices (set `--devices` before any other use of jax
+in the process, which this entrypoint guarantees by setting XLA_FLAGS first).
 
     PYTHONPATH=src python examples/serve_ann.py --batches 5 --batch-size 128
+    PYTHONPATH=src python examples/serve_ann.py --variant sharded --devices 4
 
 Sample output (all batches are enqueued before the drain starts, so per-row
 latency includes queue wait and -- for the first batch -- the one-off compile;
@@ -23,10 +28,7 @@ steady-state QPS is the number to compare against the paper)::
     [serve] latency p50=2881ms p95=3320ms | mean recall@10=0.992 (variant=inmem)
 """
 import argparse
-
-from repro.core import BangIndex, SearchConfig, brute_force_knn
-from repro.data import gaussian_mixture, uniform_queries
-from repro.runtime import ServePipeline
+import os
 
 
 def main() -> None:
@@ -39,18 +41,42 @@ def main() -> None:
     ap.add_argument("--t", type=int, default=64)
     ap.add_argument("--max-batch", type=int, default=128,
                     help="micro-batch size the pipeline drains into")
-    ap.add_argument("--variant", default="inmem", choices=["base", "inmem", "exact"])
+    ap.add_argument("--variant", default="inmem",
+                    choices=["base", "inmem", "exact", "sharded"])
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host devices for --variant sharded "
+                         "(0 = use whatever devices exist)")
     args = ap.parse_args()
+
+    if args.devices > 0:
+        # Must land before jax initializes its backend; imports below are
+        # deferred past argparse for exactly this reason.
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}"
+        ).strip()
+
+    import jax
+
+    from repro.core import BangIndex, SearchConfig, brute_force_knn
+    from repro.data import gaussian_mixture, uniform_queries
+    from repro.runtime import ServePipeline
 
     print(f"[serve] building index over {args.n} x {args.dim} corpus ...")
     data = gaussian_mixture(args.n, args.dim, n_clusters=48, seed=0)
     index = BangIndex.build(data, m=16, R=24, L_build=48)
     cfg = SearchConfig(t=args.t, bloom_z=16384)
 
-    pipe = ServePipeline(
-        index.executor(args.variant), k=args.k, cfg=cfg,
-        max_batch=args.max_batch,
-    )
+    executor = index.executor(args.variant)   # sharded -> default all-device mesh
+    if args.variant == "sharded":
+        x = executor.exchange_bytes_per_hop(args.max_batch)
+        print(
+            f"[serve] sharded over {len(jax.devices())} devices "
+            f"(model shards={x['model_shards']}): frontier exchange "
+            f"{x['payload_bytes']} B/hop (ring ~{x['ring_bytes_per_device']} "
+            f"B/device)"
+        )
+    pipe = ServePipeline(executor, k=args.k, cfg=cfg, max_batch=args.max_batch)
     for b in range(args.batches):
         queries = uniform_queries(data, args.batch_size, seed=100 + b)
         gt = brute_force_knn(data, queries, args.k)

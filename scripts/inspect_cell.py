@@ -15,6 +15,7 @@ import jax
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.compat import named_shardings, set_mesh  # noqa: E402
 from repro.launch.dryrun import _COLL_RE, _shape_bytes, _unrolled_cfgs  # noqa: E402
 
 
@@ -38,8 +39,11 @@ def main() -> None:
     mesh = make_production_mesh(multi_pod=args.multi_pod)
     shape = LM_SHAPES[args.shape]
     step, specs, shardings = step_and_specs(cfg_u, shape, mesh)
-    with jax.set_mesh(mesh):
-        compiled = jax.jit(step, in_shardings=shardings).lower(*specs).compile()
+    with set_mesh(mesh):
+        compiled = (
+            jax.jit(step, in_shardings=named_shardings(mesh, shardings))
+            .lower(*specs).compile()
+        )
     hlo = compiled.as_text()
 
     # -------- collectives, individually, sorted by payload

@@ -83,27 +83,49 @@ class BangIndex:
         return self.codes.shape[0]
 
     # ----------------------------------------------------------------- search
-    def executor(self, variant: str = "inmem"):
-        """The jit-cached SearchExecutor serving this index for `variant`.
+    def executor(self, variant: str = "inmem", *, mesh=None):
+        """The jit-cached executor serving this index for `variant`.
 
         Executors are created lazily and cached per variant; device state
         (codes, codebooks, adjacency, vectors) is uploaded once and shared —
         the inmem and exact executors reuse the same device adjacency.
-        """
-        ex = self._executors.get(variant)
-        if ex is None:
-            from repro.runtime.executor import SearchExecutor
 
-            shared_adj = None
-            if variant != "base":
-                for other in self._executors.values():
-                    if other.adjacency_dev is not None:
-                        shared_adj = other.adjacency_dev
-                        break
-            ex = SearchExecutor.from_index(
-                self, variant=variant, adjacency_dev=shared_adj,
-            )
-            self._executors[variant] = ex
+        `variant="sharded"` returns a `ShardedSearchExecutor` over `mesh`
+        (index state sharded over the mesh's `model` axis, queries over
+        `data`); with `mesh=None` it builds a default 1 x n_devices
+        ("data", "model") mesh — the whole graph spread over every local
+        device. Sharded executors are cached per (variant, mesh).
+        """
+        if variant == "sharded":
+            if mesh is None:
+                from repro.compat import make_mesh
+
+                mesh = make_mesh((1, len(jax.devices())), ("data", "model"))
+            key: Any = (variant, mesh)
+        elif mesh is not None:
+            raise ValueError(f"mesh= only applies to variant='sharded', got {variant!r}")
+        else:
+            key = variant
+        ex = self._executors.get(key)
+        if ex is None:
+            if variant == "sharded":
+                from repro.runtime.sharded import ShardedSearchExecutor
+
+                ex = ShardedSearchExecutor.from_index(self, mesh)
+            else:
+                from repro.runtime.executor import SearchExecutor
+
+                shared_adj = None
+                if variant != "base":
+                    for other in self._executors.values():
+                        if getattr(other, "variant", None) != "sharded" \
+                                and other.adjacency_dev is not None:
+                            shared_adj = other.adjacency_dev
+                            break
+                ex = SearchExecutor.from_index(
+                    self, variant=variant, adjacency_dev=shared_adj,
+                )
+            self._executors[key] = ex
         return ex
 
     def search(
@@ -116,17 +138,20 @@ class BangIndex:
         rerank: bool = True,
         cfg: SearchConfig | None = None,
         return_stats: bool = False,
+        mesh=None,
     ) -> tuple[Array, Array] | tuple[Array, Array, SearchStats]:
         """Batched k-NN search. Returns (ids (B, k), dists (B, k)).
 
-        Delegates to the per-variant `SearchExecutor`: the three-stage
-        pipeline (PQ table -> traversal -> re-rank) runs as one compiled
-        executable, cached per query-batch shape bucket, with index state
-        resident on device. Repeated searches with the same
-        (bucket, t, k, variant) never retrace. With `return_stats=True` the
-        stats separate steady-state wall time from compile time.
+        Delegates to the per-variant executor: the three-stage pipeline
+        (PQ table -> traversal -> re-rank) runs as one compiled executable,
+        cached per query-batch shape bucket, with index state resident on
+        device. Repeated searches with the same (bucket, t, k, variant)
+        never retrace. With `return_stats=True` the stats separate
+        steady-state wall time from compile time. `variant="sharded"` (with
+        an optional `mesh=`) serves from index state sharded across devices;
+        results are bit-exact equal to the single-device variants.
         """
-        return self.executor(variant).search(
+        return self.executor(variant, mesh=mesh).search(
             queries, k, t=t, cfg=cfg, rerank=rerank, return_stats=return_stats,
         )
 

@@ -19,8 +19,10 @@ and overlap. The distance psum sends R floats per query per hop instead of
 R·m code bytes: computing ADC *at the owner* is the pod-scale analogue of
 "send only the bare minimum over the link" (§4.3).
 
-These functions are designed to run INSIDE jax.shard_map; `bang_search` is
-reused unchanged with sharded neighbour/distance callbacks.
+These functions are designed to run INSIDE shard_map (via `repro.compat`);
+`bang_search` is reused unchanged with sharded neighbour/distance callbacks.
+`repro.runtime.sharded.ShardedSearchExecutor` wraps this block in the
+serving contract (shape buckets, compiled cache, dispatch/finish).
 """
 from __future__ import annotations
 
@@ -31,6 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
+
 from . import pq as pqlib
 from .search import SearchConfig, SearchResult, bang_search
 from .worklist import INVALID_ID
@@ -38,13 +42,22 @@ from .worklist import INVALID_ID
 Array = jax.Array
 
 
-def _owned(local_n: int, ids: Array, axis: str) -> tuple[Array, Array]:
-    """(relative ids, ownership mask) for globally-sharded contiguous rows."""
-    shard = jax.lax.axis_index(axis)
-    lo = shard.astype(jnp.int32) * local_n
+def _owned_at(shard, local_n: int, ids: Array) -> tuple[Array, Array]:
+    """(relative ids, ownership mask) for shard `shard` of contiguous rows.
+
+    Pure in `shard` (an int or traced scalar) so ownership is unit-testable
+    without a mesh: over shards 0..S-1, every id in [0, S*local_n) is owned
+    exactly once, and INVALID/negative/out-of-range ids are owned by nobody.
+    """
+    lo = jnp.asarray(shard, jnp.int32) * local_n
     rel = ids - lo
     own = (rel >= 0) & (rel < local_n) & (ids != INVALID_ID) & (ids >= 0)
     return jnp.clip(rel, 0, local_n - 1), own
+
+
+def _owned(local_n: int, ids: Array, axis: str) -> tuple[Array, Array]:
+    """(relative ids, ownership mask) for globally-sharded contiguous rows."""
+    return _owned_at(jax.lax.axis_index(axis), local_n, ids)
 
 
 def sharded_neighbor_fn(adjacency_local: Array, axis: str = "model"):
@@ -115,10 +128,15 @@ def sharded_bang_search_block(
     k: int,
     cfg: SearchConfig,
     axis: str = "model",
-) -> tuple[Array, Array]:
+    rerank: bool = True,
+) -> tuple[Array, Array, Array, Array]:
     """The per-shard body: full BANG pipeline on sharded state.
 
-    Returns (ids (B_loc, k), dists (B_loc, k)) -- replicated over `axis`.
+    Returns (ids (B_loc, k), dists (B_loc, k), n_hops (B_loc,),
+    n_iters (B_loc,)) -- all replicated over `axis` (the worklist/bloom state
+    is replicated per model shard, so every shard of a model group computes
+    identical results). `n_iters` is the scalar iteration count broadcast to
+    the local batch so it can share the data-sharded output spec.
     """
     res: SearchResult = bang_search(
         queries,
@@ -128,10 +146,18 @@ def sharded_bang_search_block(
         n_points=codes_local.shape[0],  # local; only used for sizing hints
         cfg=cfg,
     )
-    d2 = sharded_exact_dists(queries, data_local, res.history_ids, axis)
-    neg_top, pos = jax.lax.top_k(-d2, k)
-    ids = jnp.take_along_axis(res.history_ids, pos, axis=-1)
-    return ids, -neg_top
+    if rerank:
+        # Re-rank (§4.9) stays sharded: each shard scores only the expanded
+        # candidates it owns, a masked psum rebuilds the exact distances.
+        d2 = sharded_exact_dists(queries, data_local, res.history_ids, axis)
+        neg_top, pos = jax.lax.top_k(-d2, k)
+        ids = jnp.take_along_axis(res.history_ids, pos, axis=-1)
+        dists = -neg_top
+    else:
+        ids = res.worklist.ids[:, :k]
+        dists = res.worklist.dists[:, :k]
+    n_iters = jnp.broadcast_to(res.n_iters, res.n_hops.shape)
+    return ids, dists, res.n_hops, n_iters
 
 
 def make_sharded_search(
@@ -156,11 +182,12 @@ def make_sharded_search(
 
     def fn(queries, codebooks, codes, adjacency, data):
         table = pqlib.build_dist_table(pqlib.PQCodec(codebooks), queries)
-        return sharded_bang_search_block(
+        ids, dists, _, _ = sharded_bang_search_block(
             queries, table, codes, adjacency, data, medoid, k, cfg, model_axis
         )
+        return ids, dists
 
-    sharded = jax.shard_map(
+    sharded = shard_map(
         fn,
         mesh=mesh,
         in_specs=(
@@ -171,7 +198,7 @@ def make_sharded_search(
             P(model_axis, None),     # data
         ),
         out_specs=(P(dspec, None), P(dspec, None)),
-        check_vma=False,
+        check_rep=False,
     )
     return jax.jit(sharded)
 

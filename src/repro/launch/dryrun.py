@@ -24,6 +24,8 @@ import traceback
 
 import jax
 
+from repro.compat import named_shardings, set_mesh
+
 
 COLLECTIVES = (
     "all-gather",
@@ -88,8 +90,8 @@ def _compile_and_analyze(cfg, shape, mesh):
 
     t0 = time.time()
     step_fn, arg_specs, in_shardings = step_and_specs(cfg, shape, mesh)
-    with jax.set_mesh(mesh):
-        jitted = jax.jit(step_fn, in_shardings=in_shardings)
+    with set_mesh(mesh):
+        jitted = jax.jit(step_fn, in_shardings=named_shardings(mesh, in_shardings))
         lowered = jitted.lower(*arg_specs)
         t_lower = time.time() - t0
         compiled = lowered.compile()

@@ -24,6 +24,7 @@ def _dryrun_sharded() -> int:
     import jax.numpy as jnp
     import numpy as np
 
+    from repro.compat import set_mesh
     from repro.core import SearchConfig
     from repro.core.distributed import make_sharded_search
     from repro.launch.mesh import make_production_mesh
@@ -42,7 +43,7 @@ def _dryrun_sharded() -> int:
         jax.ShapeDtypeStruct((n, R), jnp.int32),              # adjacency
         jax.ShapeDtypeStruct((n, d), jnp.float32),            # full vectors
     )
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = fn.lower(*specs)
         compiled = lowered.compile()
     print("sharded ANNS serve step compiled on", mesh.shape)

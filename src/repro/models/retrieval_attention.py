@@ -32,6 +32,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import ambient_mesh, shard_map
+
 from .layers import apply_rope, truncated_normal_init
 
 Array = jax.Array
@@ -100,13 +102,10 @@ def _retrieve_top_l(approx: Array, top_l: int, hier: bool) -> Array:
     fewer collective bytes.
     """
     B, H, S = approx.shape
-    try:
-        mesh = jax.sharding.get_abstract_mesh()
-        names = getattr(mesh, "axis_names", ()) if mesh is not None else ()
-        have_model = "model" in names
-        NC = mesh.shape["model"] if have_model else 0
-    except Exception:  # noqa: BLE001
-        have_model, NC, names = False, 0, ()
+    mesh = ambient_mesh()
+    names = tuple(mesh.axis_names) if mesh is not None else ()
+    have_model = "model" in names
+    NC = mesh.shape["model"] if have_model else 0
     if not (hier and have_model and NC and S % NC == 0 and S // NC >= top_l):
         return jax.lax.top_k(approx, top_l)[1]
 
@@ -128,7 +127,7 @@ def _retrieve_top_l(approx: Array, top_l: int, hier: bool) -> Array:
         return lv, li
 
     spec = P(None, h_axis, "model", None)
-    lv, li = jax.shard_map(
+    lv, li = shard_map(
         local_topk, mesh=mesh, in_specs=spec, out_specs=(spec, spec)
     )(a)
     li = li + (jnp.arange(NC, dtype=jnp.int32) * (S // NC))[None, None, :, None]

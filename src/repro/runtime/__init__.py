@@ -1,6 +1,8 @@
 # Runtime subsystem: resident serving executors + the LM training loop.
-#   executor -- jit-cached, shape-bucketed three-stage search pipeline
+#   executor -- jit-cached, shape-bucketed three-stage search pipeline (1 device)
+#   sharded  -- the same contract over a device mesh (graph > one device)
 #   serving  -- streaming micro-batch serve loop with double buffering
 from .executor import SearchExecutor, SearchHandle, bucket_size, pad_batch  # noqa: F401
 from .serving import BatchReport, ServePipeline, ServeStats  # noqa: F401
+from .sharded import ShardedSearchExecutor  # noqa: F401
 from .train_loop import TrainLoopConfig, train_loop  # noqa: F401

@@ -1,4 +1,18 @@
-"""Compiled search executor: the three-stage pipeline as a resident service.
+"""Compiled search executors: the three-stage pipeline as a resident service.
+
+Two executors share one serving contract (dispatch/finish/search, shape
+buckets, compiled-executable cache, `SearchStats`):
+
+  * `SearchExecutor` (this module) -- **single device**. Index state lives on
+    one accelerator; the three variants ("inmem"/"base"/"exact") reproduce
+    the paper's single-GPU configurations.
+  * `ShardedSearchExecutor` (`repro.runtime.sharded`) -- **mesh parallel**.
+    Adjacency, PQ codes and full vectors are sharded over the mesh's `model`
+    axis and queries over `data`, so the served graph can exceed one device's
+    memory; each hop exchanges only O(frontier) bytes via masked psums
+    (`repro.core.distributed`). Drop-in subclass: `ServePipeline` and
+    `BangIndex.search(variant="sharded", mesh=...)` drive either executor
+    through the identical interface.
 
 `BangIndex.search` used to re-trace the whole `lax.while_loop` pipeline and
 re-upload the adjacency on every call, so measured QPS was dominated by
@@ -111,7 +125,6 @@ class SearchExecutor:
         self._graph = graph
         self._data_dev = data_dev
         self._data_np = data_np
-        self._min_bucket = min_bucket
         if variant == "base":
             # BANG Base: the graph stays in host RAM behind a pure_callback.
             self._adjacency = None
@@ -122,6 +135,11 @@ class SearchExecutor:
                 else jnp.asarray(graph.adjacency)
             )
             self._adjacency_np = None
+        self._init_serving_state(min_bucket)
+
+    def _init_serving_state(self, min_bucket: int) -> None:
+        """Shared dispatch/finish bookkeeping; both executor classes call it."""
+        self._min_bucket = min_bucket
         self._cache: dict[Any, Any] = {}
         self.trace_counts: dict[Any, int] = {}
         self.compile_s_total = 0.0
@@ -150,11 +168,27 @@ class SearchExecutor:
     # ------------------------------------------------------------- compiling
     def _compiled(self, bucket: int, d: int, k: int, rerank: bool,
                   cfg: SearchConfig):
+        """Cache lookup + compile accounting; `_compile` builds the program."""
         key = (bucket, d, k, rerank, cfg)
         entry = self._cache.get(key)
         if entry is not None:
             return entry, 0.0
+        t0 = time.perf_counter()
+        with warnings.catch_warnings():
+            # Donation is best-effort: when no output aliases the (bucket, d)
+            # query buffer (small k), XLA reports it unusable. Expected.
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable"
+            )
+            compiled = self._compile(key, bucket, d, k, rerank, cfg)
+        compile_s = time.perf_counter() - t0
+        self.compile_s_total += compile_s
+        self._cache[key] = compiled
+        return compiled, compile_s
 
+    def _compile(self, key, bucket: int, d: int, k: int, rerank: bool,
+                 cfg: SearchConfig):
+        """Trace + lower + compile one executable for `key` (subclass hook)."""
         variant = self.variant
 
         def pipeline(queries: Array):
@@ -197,19 +231,24 @@ class SearchExecutor:
                     dists = res.worklist.dists[:, :k]
             return ids, dists, res.n_hops, res.n_iters
 
-        t0 = time.perf_counter()
         spec = jax.ShapeDtypeStruct((bucket, d), jnp.float32)
-        with warnings.catch_warnings():
-            # Donation is best-effort: when no output aliases the (bucket, d)
-            # query buffer (small k), XLA reports it unusable. Expected.
-            warnings.filterwarnings(
-                "ignore", message="Some donated buffers were not usable"
-            )
-            compiled = jax.jit(pipeline, donate_argnums=0).lower(spec).compile()
-        compile_s = time.perf_counter() - t0
-        self.compile_s_total += compile_s
-        self._cache[key] = compiled
-        return compiled, compile_s
+        return jax.jit(pipeline, donate_argnums=0).lower(spec).compile()
+
+    # ----------------------------------------------------- subclass hooks
+    # ShardedSearchExecutor overrides these three to place queries on the
+    # mesh and feed the sharded index state to the executable; the serving
+    # logic in dispatch/finish is shared verbatim.
+    def _bucket_for(self, batch: int) -> int:
+        return bucket_size(batch, min_bucket=self._min_bucket)
+
+    def _device_queries(self, q_padded: np.ndarray) -> Array:
+        # Fresh device buffer every call: the executable donates its input,
+        # so dispatch() must never hand it a caller-owned device array (the
+        # host round-trip in dispatch() is what guarantees that).
+        return jax.device_put(q_padded)
+
+    def _run(self, compiled, q_dev: Array):
+        return compiled(q_dev)
 
     # -------------------------------------------------------------- serving
     def dispatch(
@@ -231,12 +270,11 @@ class SearchExecutor:
             raise ValueError(f"queries must be (B, d), got shape {q.shape}")
         B, d = q.shape
         cfg = cfg or SearchConfig(t=max(t, k))
-        bucket = bucket_size(B, min_bucket=self._min_bucket)
+        bucket = self._bucket_for(B)
         compiled, compile_s = self._compiled(bucket, d, k, rerank, cfg)
-        # Fresh device buffer every call: the executable donates its input.
-        q_dev = jax.device_put(pad_batch(q, bucket))
+        q_dev = self._device_queries(pad_batch(q, bucket))
         t0 = time.perf_counter()
-        ids, dists, n_hops, n_iters = compiled(q_dev)
+        ids, dists, n_hops, n_iters = self._run(compiled, q_dev)
         return SearchHandle(
             ids=ids, dists=dists, n_hops=n_hops, n_iters=n_iters,
             batch=B, bucket=bucket, dispatch_t=t0, compile_s=compile_s,
@@ -253,7 +291,9 @@ class SearchExecutor:
             return ids, dists
         hops = np.asarray(handle.n_hops)[: handle.batch]
         stats = SearchStats(
-            n_iters=int(handle.n_iters),
+            # Scalar on the single-device path; the sharded path reports one
+            # count per lane (data shards converge independently) -> max.
+            n_iters=int(np.max(np.asarray(handle.n_iters))),
             mean_hops=float(hops.mean()),
             p95_hops=float(np.percentile(hops, 95)),
             wall_s=wall,

@@ -15,9 +15,15 @@ work of the next query batch with the device-side search of the current one.
     QPS with compile time separated out (steady-state QPS is what the paper
     reports), and recall@k whenever ground truth was submitted.
 
+The pipeline is executor-agnostic: any object with the `SearchExecutor`
+dispatch/finish contract works, including `ShardedSearchExecutor` — then
+each micro-batch fans out across the mesh (queries over `data`, index state
+over `model`) with the drain loop unchanged.
+
 Typical use::
 
     pipe = ServePipeline(index.executor("inmem"), k=10, cfg=cfg, max_batch=128)
+    # or: ServePipeline(index.executor("sharded", mesh=mesh), ...)
     pipe.submit(queries, gt_ids=gt)            # any number of times
     ids, dists, stats = pipe.drain()
     print(stats.qps, stats.p95_ms, stats.mean_recall)
@@ -65,7 +71,11 @@ class ServeStats:
 
 
 class ServePipeline:
-    """Drains a query queue through a SearchExecutor with double buffering."""
+    """Drains a query queue through a search executor with double buffering.
+
+    Accepts a single-device `SearchExecutor` or a mesh-parallel
+    `ShardedSearchExecutor`; both expose the same dispatch/finish contract.
+    """
 
     def __init__(
         self,
@@ -157,9 +167,14 @@ class ServePipeline:
                 gt_idx = [i for i, r in enumerate(rows) if r[2] is not None]
                 rec = None
                 if gt_idx:
-                    gt = np.stack([rows[i][2] for i in gt_idx])
-                    kk = min(ids.shape[1], gt.shape[1])
-                    rec = recall_at_k(ids[gt_idx][:, :kk], gt[:, :kk])
+                    # Rows may carry gt of different widths (separate
+                    # submit() calls); truncate to the narrowest before
+                    # stacking so wide gt doesn't deflate the ratio and
+                    # ragged widths don't crash the stack.
+                    gt_rows = [rows[i][2] for i in gt_idx]
+                    kk = min(ids.shape[1], min(len(g) for g in gt_rows))
+                    gt = np.stack([g[:kk] for g in gt_rows])
+                    rec = recall_at_k(ids[gt_idx][:, :kk], gt)
                     recalls.append(rec)
                 if on_batch is not None:
                     on_batch(BatchReport(

@@ -1,0 +1,192 @@
+"""Mesh-parallel search executor: BANG serving beyond one device's memory.
+
+`SearchExecutor` keeps the whole index resident on a single device -- the
+paper's single-GPU regime. This module scales the same serving contract to a
+`jax.sharding.Mesh`, the regime the paper actually targets (a graph too big
+for one device, §4): adjacency, PQ codes and full vectors are *row-sharded
+over the `model` axis* (each device owns a contiguous block of node ids),
+queries are sharded over `data`, and the three stages run fused inside one
+donated `jax.jit(shard_map(...))`:
+
+    stage 1  PQ distance table    per data shard, from replicated codebooks
+    stage 2  graph traversal      owner-shard adjacency gather + psum(model),
+                                  owner-shard ADC + psum(model); worklist and
+                                  bloom state replicated per model group
+    stage 3  exact re-rank        owner-shard partial L2 + psum(model)
+
+Only the frontier crosses the wire -- per hop, per data shard, a (B_loc, R)
+int32 neighbour exchange and a (B_loc, R) f32 distance exchange
+(`exchange_bytes_per_hop`) -- the paper's PCIe frugality re-expressed as
+dense mesh collectives (`repro.core.distributed`).
+
+Every model shard of a data group computes identical worklists from the
+psum-reconstructed rows, so results are **bit-exact** equal to the
+single-device executor on the same index (tests/test_sharded_executor.py
+asserts ids and distances both).
+
+The serving surface is inherited unchanged from `SearchExecutor`: shape
+buckets (rounded up to a multiple of the data-axis size so rows split
+evenly), per-(bucket, k, rerank, cfg) compiled-executable cache,
+`dispatch()`/`finish()` async pairing, `SearchStats`. `ServePipeline`
+therefore drives either executor without knowing which one it has.
+
+Typical use::
+
+    mesh = repro.compat.make_mesh((2, 4), ("data", "model"))
+    ex = ShardedSearchExecutor.from_index(idx, mesh)
+    ids, dists = ex.search(queries, k=10, t=64)
+    # or through the index: idx.search(queries, variant="sharded", mesh=mesh)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core import pq as pqlib
+from repro.core.distributed import pad_to_multiple, sharded_bang_search_block
+from repro.core.search import SearchConfig
+from repro.core.vamana import VamanaGraph
+
+from .executor import SearchExecutor, bucket_size
+
+Array = jax.Array
+
+
+class ShardedSearchExecutor(SearchExecutor):
+    """Device-mesh sibling of `SearchExecutor`: same contract, sharded state."""
+
+    def __init__(
+        self,
+        codec: pqlib.PQCodec,
+        codes,
+        graph: VamanaGraph,
+        mesh: Mesh,
+        *,
+        data,
+        data_axis: str = "data",
+        model_axis: str = "model",
+        min_bucket: int = 8,
+    ) -> None:
+        if data_axis not in mesh.shape or model_axis not in mesh.shape:
+            raise ValueError(
+                f"mesh axes {tuple(mesh.shape)} must include "
+                f"{data_axis!r} and {model_axis!r}"
+            )
+        if data is None:
+            raise ValueError("sharded executor needs full vectors (re-rank source)")
+        # Deliberately not super().__init__: the parent constructor places
+        # single-device state (and rejects variant="sharded"); the serving
+        # bookkeeping the shared dispatch/finish path relies on comes from
+        # the same _init_serving_state both constructors call.
+        self.variant = "sharded"
+        self.mesh = mesh
+        self._data_axis = data_axis
+        self._model_axis = model_axis
+        self._graph = graph
+        self._init_serving_state(min_bucket)
+
+        S = mesh.shape[model_axis]
+        self.n_model_shards = S
+        self.n_data_shards = mesh.shape[data_axis]
+        # Row-shard the index state over `model`: contiguous blocks, padded so
+        # S divides n. Pad rows are unreachable (adjacency pad is -1, and no
+        # real row points past n), so fill values are inert.
+        adjacency = pad_to_multiple(np.asarray(graph.adjacency, np.int32), S, -1)
+        codes_np = pad_to_multiple(np.asarray(codes, np.uint8), S, 0)
+        data_np = pad_to_multiple(np.asarray(data, np.float32), S, 0.0)
+        self.R = adjacency.shape[1]
+        model_spec = NamedSharding(mesh, P(model_axis, None))
+        self._adjacency = jax.device_put(adjacency, model_spec)
+        self._codes = jax.device_put(codes_np, model_spec)
+        self._data_dev = jax.device_put(data_np, model_spec)
+        self._codebooks = jax.device_put(
+            np.asarray(codec.codebooks, np.float32), NamedSharding(mesh, P())
+        )
+        self._query_sharding = NamedSharding(mesh, P(data_axis, None))
+
+    @classmethod
+    def from_index(cls, index, mesh: Mesh, **kw) -> "ShardedSearchExecutor":
+        return cls(
+            index.codec, index.codes, index.graph, mesh,
+            data=index.data_np, **kw,
+        )
+
+    # ------------------------------------------------------------- compiling
+    def _compile(self, key, bucket: int, d: int, k: int, rerank: bool,
+                 cfg: SearchConfig):
+        """Trace + lower the sharded pipeline (cache/accounting in the base)."""
+        mesh = self.mesh
+        daxis, maxis = self._data_axis, self._model_axis
+        medoid = self._graph.medoid
+
+        def pipeline(queries, codebooks, codes, adjacency, data):
+            # Trace-time side effect: runs once per compiled executable.
+            self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
+            table = pqlib.build_dist_table(pqlib.PQCodec(codebooks), queries)
+            return sharded_bang_search_block(
+                queries, table, codes, adjacency, data,
+                medoid, k, cfg, maxis, rerank=rerank,
+            )
+
+        sharded = shard_map(
+            pipeline,
+            mesh=mesh,
+            in_specs=(
+                P(daxis, None),      # queries
+                P(),                 # codebooks (replicated)
+                P(maxis, None),      # codes
+                P(maxis, None),      # adjacency
+                P(maxis, None),      # data
+            ),
+            out_specs=(P(daxis, None), P(daxis, None), P(daxis), P(daxis)),
+            check_rep=False,
+        )
+
+        q_spec = jax.ShapeDtypeStruct(
+            (bucket, d), jnp.float32, sharding=self._query_sharding
+        )
+        return (
+            jax.jit(sharded, donate_argnums=0)
+            .lower(q_spec, self._codebooks, self._codes,
+                   self._adjacency, self._data_dev)
+            .compile()
+        )
+
+    # ----------------------------------------------------- dispatch plumbing
+    def _bucket_for(self, batch: int) -> int:
+        """Power-of-two bucket, rounded up so data shards split it evenly."""
+        b = bucket_size(batch, min_bucket=self._min_bucket)
+        D = self.n_data_shards
+        return b if b % D == 0 else -(-b // D) * D
+
+    def _device_queries(self, q_padded: np.ndarray) -> Array:
+        return jax.device_put(q_padded, self._query_sharding)
+
+    def _run(self, compiled, q_dev: Array):
+        return compiled(
+            q_dev, self._codebooks, self._codes, self._adjacency, self._data_dev
+        )
+
+    # ------------------------------------------------------------ accounting
+    def exchange_bytes_per_hop(self, batch: int) -> dict:
+        """Logical bytes the frontier exchange moves per hop (paper §4.3).
+
+        Per data shard and hop, the model-axis psums carry a (B_loc, R) int32
+        neighbour payload plus a (B_loc, R) f32 distance payload. `ring`
+        estimates the per-device wire traffic of a ring all-reduce
+        (2·(S-1)/S x payload); S=1 meshes exchange nothing.
+        """
+        bucket = self._bucket_for(batch)
+        b_loc = bucket // self.n_data_shards
+        payload = b_loc * self.R * (4 + 4)
+        S = self.n_model_shards
+        ring = int(2 * (S - 1) / S * payload) if S > 1 else 0
+        return {
+            "payload_bytes": payload,
+            "ring_bytes_per_device": ring,
+            "model_shards": S,
+            "data_shards": self.n_data_shards,
+        }

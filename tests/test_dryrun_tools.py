@@ -77,8 +77,9 @@ def test_partitioning_rules_divisibility():
     from repro.launch.mesh import make_production_mesh
     import os
     # production mesh needs 256 devices; use an abstract mesh instead
-    from jax.sharding import AbstractMesh, PartitionSpec as P
-    mesh = AbstractMesh((("data", 16), ("model", 16)))
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import abstract_mesh
+    mesh = abstract_mesh((("data", 16), ("model", 16)))
     cfg = configs.get("granite-3-2b")
     specs = param_pspecs(param_specs(cfg), mesh)
     assert specs["embed"] == P(None, "data")      # vocab 49155 odd -> replicated

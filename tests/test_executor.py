@@ -166,3 +166,10 @@ def test_serve_pipeline_recall_with_mixed_and_wide_gt(small_ann_index):
     _, _, stats = pipe.drain()
     assert stats.batches == 1
     assert stats.mean_recall is not None and stats.mean_recall >= 0.8
+    # Ragged gt widths in ONE micro-batch (separate submits) must not crash:
+    # rows are truncated to the narrowest width before scoring.
+    pipe.submit(queries[:6], gt_ids=wide_gt[:6])        # width 20
+    pipe.submit(queries[6:], gt_ids=wide_gt[6:, :8])    # width 8
+    _, _, stats = pipe.drain()
+    assert stats.batches == 1
+    assert stats.mean_recall is not None and stats.mean_recall >= 0.8

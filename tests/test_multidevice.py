@@ -30,6 +30,7 @@ def test_sharded_search_matches_single_device():
         """
 import numpy as np, jax
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import make_mesh, set_mesh
 from repro.core import BangIndex, SearchConfig, brute_force_knn, recall_at_k
 from repro.core.distributed import make_sharded_search, pad_to_multiple
 
@@ -38,13 +39,13 @@ n, d, B, k = 600, 24, 16, 5
 data = rng.standard_normal((n, d)).astype(np.float32)
 queries = rng.standard_normal((B, d)).astype(np.float32)
 idx = BangIndex.build(data, m=6, R=16, L_build=24)
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((4, 2), ("data", "model"))
 cfg = SearchConfig(t=32, bloom_z=4096)
 adj = pad_to_multiple(idx.graph.adjacency, 2, -1)
 codes = pad_to_multiple(np.asarray(idx.codes), 2, 0)
 dat = pad_to_multiple(data, 2, 1e9)
 fn = make_sharded_search(mesh, idx.graph.medoid, k, cfg)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     args = [
         jax.device_put(queries, NamedSharding(mesh, P("data", None))),
         jax.device_put(np.asarray(idx.codec.codebooks), NamedSharding(mesh, P())),
@@ -68,6 +69,7 @@ def test_reduced_arch_train_step_on_mesh():
 import numpy as np, jax, jax.numpy as jnp
 import dataclasses
 import repro.configs as configs
+from repro.compat import named_shardings, set_mesh
 from repro.configs.base import ShapeSpec
 from repro.launch.specs import step_and_specs
 from repro.launch.mesh import make_test_mesh
@@ -79,8 +81,8 @@ cfg = configs.get("glm4-9b").reduced(d_model=128, n_heads=8, n_kv_heads=2, head_
 shape = ShapeSpec("t", "train", 64, 8)
 mesh = make_test_mesh((4, 2), ("data", "model"))
 step, specs, shardings = step_and_specs(cfg, shape, mesh)
-with jax.set_mesh(mesh):
-    jitted = jax.jit(step, in_shardings=shardings)
+with set_mesh(mesh):
+    jitted = jax.jit(step, in_shardings=named_shardings(mesh, shardings))
     # materialize real inputs placed with the expected shardings
     def mk(s, spec):
         host = (_np.zeros(s.shape, "int32") if s.dtype == jnp.int32
@@ -102,7 +104,8 @@ def test_elastic_checkpoint_across_meshes(tmp_path):
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import save_checkpoint
-mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((4,), ("data",))
 x = jax.device_put(np.arange(64, dtype=np.float32).reshape(8, 8), NamedSharding(mesh, P("data", None)))
 save_checkpoint({str(tmp_path)!r}, 5, {{"x": x}})
 print("saved")
@@ -111,7 +114,8 @@ print("saved")
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import load_checkpoint
-mesh = jax.make_mesh((2,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((2,), ("data",))
 template = {{"x": jax.ShapeDtypeStruct((8, 8), jnp.float32)}}
 def shard(key, arr):
     return NamedSharding(mesh, P("data", None))
