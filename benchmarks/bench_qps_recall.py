@@ -2,19 +2,27 @@
 plus the mesh-sharded serving sweep (the billion-scale regime's shape).
 
 CPU host stands in for the accelerator (numbers are relative, the shape of
-the QPS/recall frontier is the reproduced object). Two sweeps:
+the QPS/recall frontier is the reproduced object). Three sweeps:
 
   * **Worklist sweep** (single device): t in 16..152 exactly as the paper
     does to trace the QPS/recall curve; the brute-force scan is the exact
     baseline every ANNS must beat.
-  * **Device sweep** (sharded): the same serving workload on 1/2/4/8 fake
-    host devices (`XLA_FLAGS=--xla_force_host_platform_device_count`, one
-    subprocess per count because the device count locks at backend init),
-    index state sharded over the `model` axis via `ShardedSearchExecutor`.
-    Each row reports steady-state QPS plus the frontier exchange the mesh
-    pays per hop (`bytes_hop` = logical psum payload, `ring` = estimated
-    per-device wire bytes of a ring all-reduce) -- the O(frontier) link
-    traffic that is the paper's central claim (§4.3).
+  * **Model-axis device sweep** (sharded + sharded-base): the same serving
+    workload on 1/2/4/8 fake host devices
+    (`XLA_FLAGS=--xla_force_host_platform_device_count`, one subprocess per
+    count because the device count locks at backend init), index state
+    sharded over the `model` axis via `ShardedSearchExecutor` -- every added
+    device grows the servable graph. Run for both graph placements: device
+    HBM (`variant="sharded"`) and host RAM behind per-shard callbacks
+    (`variant="sharded-base"`).
+  * **Data-axis sweep** (query-parallel scaling): the same devices all on
+    the `data` axis -- the graph is replicated, queries split, QPS scales.
+
+Each sharded row is a machine-readable JSON record (`SHARDED_ROW_SCHEMA`)
+reporting steady-state QPS plus the per-hop link traffic split the paper is
+about (§4.3): `collective_bytes_per_hop` / ring estimate for the inter-device
+psums, and `host_link_bytes_per_hop` (frontier ids out + adjacency rows
+back, with both legs itemised) for the host-resident graph placements.
 
 Measured through the runtime subsystem: a warm-up drain through
 `ServePipeline` pays the per-bucket compile once, then the timed drains
@@ -23,6 +31,7 @@ derived column so the benchmark trajectory measures search, not tracing.
 """
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
@@ -37,6 +46,53 @@ from .common import bench_dataset, timeit
 REPEATS = 3
 SHARDED_DEVICE_COUNTS = (1, 2, 4, 8)
 SHARDED_T = 64
+SHARDED_BATCH = 64
+
+# The JSON schema of one sharded-sweep row (tests/test_sharded_base.py pins
+# it, including the host-link fields). `us_per_query` mirrors the CSV column.
+SHARDED_ROW_SCHEMA = frozenset({
+    "name", "us_per_query", "recall", "qps", "devices", "variant",
+    "model_shards", "data_shards",
+    "collective_bytes_per_hop", "collective_ring_bytes_per_device",
+    "host_ids_out_bytes_per_hop", "host_rows_in_bytes_per_hop",
+    "host_link_bytes_per_hop", "compile_s",
+})
+
+
+def sharded_row(
+    name: str, ex, devices: int, recall: float, qps: float,
+    us_per_query: float, compile_s: float, batch: int = SHARDED_BATCH,
+) -> dict:
+    """One sharded-sweep record conforming to SHARDED_ROW_SCHEMA."""
+    x = ex.exchange_bytes_per_hop(batch)
+    return {
+        "name": name,
+        "us_per_query": round(us_per_query, 1),
+        "recall": round(recall, 4),
+        "qps": round(qps, 1),
+        "devices": devices,
+        "variant": ex.variant,
+        "model_shards": x["model_shards"],
+        "data_shards": x["data_shards"],
+        "collective_bytes_per_hop": x["collective_bytes"],
+        "collective_ring_bytes_per_device": x["ring_bytes_per_device"],
+        "host_ids_out_bytes_per_hop": x["host_ids_out_bytes"],
+        "host_rows_in_bytes_per_hop": x["host_rows_in_bytes"],
+        "host_link_bytes_per_hop": x["host_link_bytes"],
+        "compile_s": round(compile_s, 2),
+    }
+
+
+def _row_derived(row: dict) -> str:
+    """Flatten a sharded row into the CSV `derived` column."""
+    return (
+        f"recall={row['recall']:.3f},qps={row['qps']:.0f},"
+        f"devices={row['devices']},variant={row['variant']},"
+        f"collective_hop={row['collective_bytes_per_hop']},"
+        f"ring={row['collective_ring_bytes_per_device']},"
+        f"host_link_hop={row['host_link_bytes_per_hop']},"
+        f"compile_s={row['compile_s']:.2f}"
+    )
 
 
 def _steady_state(pipe: ServePipeline, queries, gt):
@@ -103,19 +159,29 @@ def _device_sweep(report) -> None:
         except subprocess.TimeoutExpired:
             report(f"fig9_sharded_d{devices}", 0.0, "error=worker timeout")
             continue
+        # Rows flush as each cell completes: report whatever finished even if
+        # a later cell of the same subprocess crashed, then the error.
+        for line in out.stdout.splitlines():
+            if line.startswith("ROWJSON,"):
+                row = json.loads(line.split(",", 1)[1])
+                report(row["name"], row["us_per_query"], _row_derived(row))
         if out.returncode != 0:
             err_lines = (out.stderr or "").strip().splitlines()
             err = err_lines[-1][:80] if err_lines else "unknown"
-            report(f"fig9_sharded_d{devices}", 0.0, f"error={err}")
-            continue
-        for line in out.stdout.splitlines():
-            if line.startswith("ROW,"):
-                _, name, us, derived = line.split(",", 3)
-                report(name, float(us), derived)
+            report(f"fig9_sharded_worker_d{devices}", 0.0, f"error={err}")
 
 
 def _sharded_worker(devices: int) -> None:
-    """Child process body: serve the bench workload on a forced-device mesh."""
+    """Child process body: serve the bench workload on forced-device meshes.
+
+    Emits one `ROWJSON,<record>` line per (mesh, variant) cell:
+
+      fig9_sharded_d{N}        model-axis mesh (1, N), graph device-sharded
+      fig9_sharded_base_d{N}   model-axis mesh (1, N), graph in host RAM
+                               behind per-shard callbacks (host-link traffic)
+      fig9_dataparallel_d{N}   data-axis mesh (N, 1), graph replicated,
+                               queries split N ways (query-parallel scaling)
+    """
     import jax
 
     from repro.compat import make_mesh
@@ -125,21 +191,27 @@ def _sharded_worker(devices: int) -> None:
     data, queries, idx = bench_dataset()
     k = 10
     gt = brute_force_knn(data, queries, k)
-    # All devices on `model`: every added device grows the servable graph --
-    # the capability this sweep exists to measure.
-    mesh = make_mesh((1, devices), ("data", "model"))
-    ex = ShardedSearchExecutor.from_index(idx, mesh)
     cfg = SearchConfig(t=SHARDED_T, bloom_z=16384)
-    pipe = ServePipeline(ex, k=k, cfg=cfg, max_batch=64)
-    r, best_qps, best_wall, warm = _steady_state(pipe, queries, gt)
-    xb = ex.exchange_bytes_per_hop(64)
-    print(
-        f"ROW,fig9_sharded_d{devices},{best_wall / len(queries) * 1e6:.1f},"
-        f"recall={r:.3f},qps={best_qps:.0f},devices={devices},"
-        f"bytes_hop={xb['payload_bytes']},ring={xb['ring_bytes_per_device']},"
-        f"compile_s={warm.compile_s:.2f}",
-        flush=True,
-    )
+    cells = [
+        # All devices on `model`: every added device grows the servable
+        # graph -- the capability the model-axis sweep exists to measure.
+        (f"fig9_sharded_d{devices}", (1, devices), "sharded"),
+        (f"fig9_sharded_base_d{devices}", (1, devices), "sharded-base"),
+    ]
+    if devices > 1:
+        # All devices on `data`: the query-parallel scaling curve. At
+        # devices=1 this cell would duplicate fig9_sharded_d1 exactly.
+        cells.append((f"fig9_dataparallel_d{devices}", (devices, 1), "sharded"))
+    for name, mesh_shape, variant in cells:
+        mesh = make_mesh(mesh_shape, ("data", "model"))
+        ex = ShardedSearchExecutor.from_index(idx, mesh, variant=variant)
+        pipe = ServePipeline(ex, k=k, cfg=cfg, max_batch=SHARDED_BATCH)
+        r, best_qps, best_wall, warm = _steady_state(pipe, queries, gt)
+        row = sharded_row(
+            name, ex, devices, r, best_qps,
+            best_wall / len(queries) * 1e6, warm.compile_s,
+        )
+        print(f"ROWJSON,{json.dumps(row)}", flush=True)
 
 
 if __name__ == "__main__":

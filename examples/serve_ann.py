@@ -10,12 +10,17 @@ steady-state search time.
 `--variant base` keeps the graph behind a host callback -- the paper's
 CPU-side graph service; `--variant inmem`/`exact` are the §5 variants.
 `--variant sharded --devices N` serves the index sharded over an N-device
-("model"-axis) mesh -- the graph-bigger-than-one-device regime; on a CPU
-host it forces N fake devices (set `--devices` before any other use of jax
-in the process, which this entrypoint guarantees by setting XLA_FLAGS first).
+("model"-axis) mesh -- the graph-bigger-than-one-device regime -- and
+`--variant sharded-base` is the same mesh with the graph staying in host
+RAM, row-partitioned behind one callback per model shard (the server prints
+the per-hop host-link vs collective byte split). On a CPU host `--devices N`
+forces N fake devices (set before any other use of jax in the process, which
+this entrypoint guarantees by setting XLA_FLAGS first). See `--help` for the
+full variant x placement matrix.
 
     PYTHONPATH=src python examples/serve_ann.py --batches 5 --batch-size 128
     PYTHONPATH=src python examples/serve_ann.py --variant sharded --devices 4
+    PYTHONPATH=src python examples/serve_ann.py --variant sharded-base --devices 4
 
 Sample output (all batches are enqueued before the drain starts, so per-row
 latency includes queue wait and -- for the first batch -- the one-off compile;
@@ -30,9 +35,24 @@ steady-state QPS is the number to compare against the paper)::
 import argparse
 import os
 
+VARIANT_MATRIX = """\
+variant matrix (distances down, graph placement across; every PQ cell is
+bit-exact vs its row-mates, and each cell also runs with use_kernels=True
+Pallas fast paths on TPU):
+
+    distances \\ placement   single device        mesh-sharded (--devices N)
+    ----------------------  -------------------  --------------------------
+    PQ, graph on device     inmem                sharded
+    PQ, graph in host RAM   base                 sharded-base
+    exact, no re-rank       exact                --
+"""
+
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog=VARIANT_MATRIX,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
     ap.add_argument("--n", type=int, default=6000)
     ap.add_argument("--dim", type=int, default=64)
     ap.add_argument("--batches", type=int, default=5)
@@ -42,9 +62,10 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=128,
                     help="micro-batch size the pipeline drains into")
     ap.add_argument("--variant", default="inmem",
-                    choices=["base", "inmem", "exact", "sharded"])
+                    choices=["base", "inmem", "exact", "sharded",
+                             "sharded-base"])
     ap.add_argument("--devices", type=int, default=0,
-                    help="force N host devices for --variant sharded "
+                    help="force N host devices for the sharded variants "
                          "(0 = use whatever devices exist)")
     args = ap.parse_args()
 
@@ -68,13 +89,19 @@ def main() -> None:
     cfg = SearchConfig(t=args.t, bloom_z=16384)
 
     executor = index.executor(args.variant)   # sharded -> default all-device mesh
-    if args.variant == "sharded":
-        x = executor.exchange_bytes_per_hop(args.max_batch)
+    x = executor.exchange_bytes_per_hop(args.max_batch)
+    if args.variant.startswith("sharded"):
         print(
-            f"[serve] sharded over {len(jax.devices())} devices "
-            f"(model shards={x['model_shards']}): frontier exchange "
-            f"{x['payload_bytes']} B/hop (ring ~{x['ring_bytes_per_device']} "
+            f"[serve] {args.variant} over {len(jax.devices())} devices "
+            f"(model shards={x['model_shards']}): collective exchange "
+            f"{x['collective_bytes']} B/hop (ring ~{x['ring_bytes_per_device']} "
             f"B/device)"
+        )
+    if x["host_link_bytes"]:
+        print(
+            f"[serve] host link per hop: {x['host_ids_out_bytes']} B frontier "
+            f"ids out + {x['host_rows_in_bytes']} B adjacency rows back = "
+            f"{x['host_link_bytes']} B (graph stays in host RAM)"
         )
     pipe = ServePipeline(executor, k=args.k, cfg=cfg, max_batch=args.max_batch)
     for b in range(args.batches):

@@ -14,12 +14,13 @@ Keep this module dependency-free (jax only): it is imported by `core`,
 from __future__ import annotations
 
 import contextlib
+import inspect
 from typing import Sequence
 
 import jax
 
 __all__ = [
-    "make_mesh", "set_mesh", "shard_map", "named_shardings",
+    "make_mesh", "set_mesh", "shard_map", "pure_callback", "named_shardings",
     "abstract_mesh", "ambient_mesh",
 ]
 
@@ -62,6 +63,25 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_rep: bool = True):
 
     return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                check_rep=check_rep)
+
+
+def pure_callback(fn, result_shape_dtypes, *args):
+    """`jax.pure_callback` across the vmap-API drift, shard_map-safe.
+
+    Newer JAX spells the batching rule `vmap_method=`; the early 0.4.x line
+    only knows `vectorized=` (and warns-then-errors on the new kwarg). Both
+    spellings below mean the same thing -- "call the host fn once per
+    batch member, never claim it vectorizes" -- which is also the only rule
+    that is safe under `shard_map`, where the callback runs once per device
+    with that device's local block. Host-service call sites (the BANG base
+    and sharded-base graph callbacks, the host re-rank gather) go through
+    here instead of probing `jax` themselves.
+    """
+    if "vmap_method" in inspect.signature(jax.pure_callback).parameters:
+        return jax.pure_callback(
+            fn, result_shape_dtypes, *args, vmap_method="sequential"
+        )
+    return jax.pure_callback(fn, result_shape_dtypes, *args, vectorized=False)
 
 
 def named_shardings(mesh, tree):

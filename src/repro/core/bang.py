@@ -4,10 +4,23 @@
     Stage 2  ANN search                    (§4.1-4.8, repro.core.search)
     Stage 3  Re-ranking                    (§4.9, repro.core.rerank)
 
-Variants (paper §5):
-    "base"   graph + full vectors on host, PQ distances on device  (BANG Base)
-    "inmem"  everything on device, PQ distances + re-rank          (In-memory)
-    "exact"  everything on device, exact distances, no re-rank     (Exact-distance)
+Variant x placement matrix (`search(variant=...)`): distances down, graph
+placement across. Every cell returns bit-exact ids+dists vs its row-mates
+(the PQ cells re-rank with exact L2, so their outputs agree bitwise); each
+cell also takes `SearchConfig(use_kernels=True)` to swap the sort/ADC/re-rank
+inner loops for the Pallas fast paths on TPU (or interpret mode) -- kernels
+change the schedule, not the variant semantics.
+
+    distances \\ placement   single device        mesh-sharded (mesh=...)
+    ----------------------  -------------------  ------------------------
+    PQ, graph on device     "inmem"              "sharded"
+    PQ, graph in host RAM   "base"               "sharded-base"
+    exact, no re-rank       "exact"              --
+
+"base"/"sharded-base" are BANG proper (paper §5): the graph stays in host
+RAM behind pure_callback neighbour services (one per model shard in the
+sharded case) and only frontier ids / adjacency rows cross the host link.
+"inmem"/"sharded" are BANG In-memory; "exact" is BANG Exact-distance.
 """
 from __future__ import annotations
 
@@ -92,33 +105,42 @@ class BangIndex:
 
         `variant="sharded"` returns a `ShardedSearchExecutor` over `mesh`
         (index state sharded over the mesh's `model` axis, queries over
-        `data`); with `mesh=None` it builds a default 1 x n_devices
-        ("data", "model") mesh — the whole graph spread over every local
-        device. Sharded executors are cached per (variant, mesh).
+        `data`); `variant="sharded-base"` is the same executor with the
+        graph kept in host RAM, row-partitioned per model shard behind
+        per-shard callbacks (no device adjacency upload). With `mesh=None`
+        either builds a default 1 x n_devices ("data", "model") mesh — the
+        whole graph spread over every local device. Sharded executors are
+        cached per (variant, mesh), so the two sharded variants never share
+        (or alias) executor state even on the same mesh.
         """
-        if variant == "sharded":
+        if variant in ("sharded", "sharded-base"):
             if mesh is None:
                 from repro.compat import make_mesh
 
                 mesh = make_mesh((1, len(jax.devices())), ("data", "model"))
             key: Any = (variant, mesh)
         elif mesh is not None:
-            raise ValueError(f"mesh= only applies to variant='sharded', got {variant!r}")
+            raise ValueError(
+                f"mesh= only applies to the sharded variants, got {variant!r}"
+            )
         else:
             key = variant
         ex = self._executors.get(key)
         if ex is None:
-            if variant == "sharded":
+            if variant in ("sharded", "sharded-base"):
                 from repro.runtime.sharded import ShardedSearchExecutor
 
-                ex = ShardedSearchExecutor.from_index(self, mesh)
+                ex = ShardedSearchExecutor.from_index(self, mesh, variant=variant)
             else:
                 from repro.runtime.executor import SearchExecutor
 
                 shared_adj = None
                 if variant != "base":
                     for other in self._executors.values():
-                        if getattr(other, "variant", None) != "sharded" \
+                        # Only single-device device-resident adjacency is
+                        # shareable: the sharded executors' adjacency (when
+                        # they have one at all) carries a mesh sharding.
+                        if not str(getattr(other, "variant", "")).startswith("sharded") \
                                 and other.adjacency_dev is not None:
                             shared_adj = other.adjacency_dev
                             break
@@ -147,9 +169,11 @@ class BangIndex:
         cached per query-batch shape bucket, with index state resident on
         device. Repeated searches with the same (bucket, t, k, variant)
         never retrace. With `return_stats=True` the stats separate
-        steady-state wall time from compile time. `variant="sharded"` (with
-        an optional `mesh=`) serves from index state sharded across devices;
-        results are bit-exact equal to the single-device variants.
+        steady-state wall time from compile time. `variant="sharded"` /
+        `"sharded-base"` (with an optional `mesh=`) serve from index state
+        sharded across devices — the latter with the graph in host RAM
+        behind per-shard callbacks; results are bit-exact equal to the
+        single-device variants.
         """
         return self.executor(variant, mesh=mesh).search(
             queries, k, t=t, cfg=cfg, rerank=rerank, return_stats=return_stats,

@@ -12,6 +12,13 @@ graph, codes, and full vectors are *sharded over the `model` mesh axis* (a
     worklist / bloom  : replicated per model shard (tiny, zero comms)
     re-rank           : owner-shard partial exact-L2 + psum
 
+The neighbour fetch has two placements: `sharded_neighbor_fn` gathers from
+device-sharded adjacency (the in-memory configuration), while
+`host_shard_neighbor_fn` keeps each shard's graph block in *host RAM* behind
+a per-shard `pure_callback` (the paper's CPU neighbour service at mesh
+scale: only frontier ids cross the host link out, only adjacency rows come
+back) -- same ownership math, bit-identical results.
+
 Each valid node id is owned by exactly one shard (contiguous row sharding),
 so a masked psum reconstructs the full row exchange -- the ragged all-to-all
 of the paper's CPU service, expressed as a dense collective XLA can schedule
@@ -27,13 +34,14 @@ serving contract (shape buckets, compiled cache, dispatch/finish).
 from __future__ import annotations
 
 import functools
-from typing import Sequence
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.compat import shard_map
+from repro.compat import pure_callback, shard_map
 
 from . import pq as pqlib
 from .search import SearchConfig, SearchResult, bang_search
@@ -71,6 +79,58 @@ def sharded_neighbor_fn(adjacency_local: Array, axis: str = "model"):
         contrib = jnp.where(own[:, None], rows + 1, 0)
         summed = jax.lax.psum(contrib, axis)
         return summed - 1
+
+    return fn
+
+
+def host_shard_service(
+    partition: np.ndarray, rel: np.ndarray, own: np.ndarray
+) -> np.ndarray:
+    """One shard's host-RAM adjacency contribution (numpy, runs per callback).
+
+    `rel`/`own` come from `_owned_at`: only owned lanes index `partition`
+    (sentinel/padded/out-of-shard ids never touch host memory -- the property
+    tests/test_sharded_base.py pins), and the +1 shift makes 0 the neutral
+    element of the cross-shard psum (pad neighbours are -1).
+    """
+    rel = np.asarray(rel)
+    own = np.asarray(own, bool)
+    out = np.zeros((rel.shape[0], partition.shape[1]), np.int32)
+    out[own] = partition[rel[own]] + 1
+    return out
+
+
+def host_shard_neighbor_fn(
+    partitions: Sequence[np.ndarray], axis: str = "model"
+) -> Callable:
+    """Sharded BANG Base: each model shard's graph block stays in host RAM.
+
+    The JAX-native analogue of the paper's per-GPU CPU neighbour service
+    (§4.1) at mesh scale: each shard ships its (B_loc,) frontier ids to *its
+    own* host partition through `pure_callback`, the host gathers only the
+    rows that shard owns (`_owned_at` contiguous ownership), and a masked
+    psum over `axis` reconstructs the full (B_loc, R) row exchange -- so the
+    device never holds the adjacency, and per hop the host link carries only
+    frontier ids out and adjacency rows back.
+
+    `partitions[s]` must be the contiguous rows [s*n_loc, (s+1)*n_loc) of the
+    (padded) adjacency; results are bit-identical to `sharded_neighbor_fn`
+    over the concatenated array.
+    """
+    parts = [np.ascontiguousarray(np.asarray(p, np.int32)) for p in partitions]
+    n_loc, R = parts[0].shape
+    if any(p.shape != (n_loc, R) for p in parts):
+        raise ValueError("host partitions must share one (n_loc, R) shape")
+
+    def host_gather(shard: np.ndarray, rel: np.ndarray, own: np.ndarray):
+        return host_shard_service(parts[int(shard)], rel, own)
+
+    def fn(u: Array) -> Array:
+        shard = jax.lax.axis_index(axis)
+        rel, own = _owned_at(shard, n_loc, u)
+        res = jax.ShapeDtypeStruct((u.shape[0], R), jnp.int32)
+        contrib = pure_callback(host_gather, res, shard, rel, own)
+        return jax.lax.psum(contrib, axis) - 1
 
     return fn
 
@@ -122,15 +182,23 @@ def sharded_bang_search_block(
     queries: Array,          # (B_loc, d)      sharded over data axes
     table: Array,            # (B_loc, m, 256) sharded over data axes
     codes_local: Array,      # (n_loc, m)      sharded over model axis
-    adjacency_local: Array,  # (n_loc, R)      sharded over model axis
+    adjacency_local: Array | None,  # (n_loc, R) sharded over model axis,
+                             # or None when `neighbor_fn` serves the graph
     data_local: Array,       # (n_loc, d)      sharded over model axis
     medoid: int,
     k: int,
     cfg: SearchConfig,
     axis: str = "model",
     rerank: bool = True,
+    neighbor_fn: Callable | None = None,
 ) -> tuple[Array, Array, Array, Array]:
     """The per-shard body: full BANG pipeline on sharded state.
+
+    The graph source is pluggable: by default adjacency rows come from the
+    device-sharded `adjacency_local` (`sharded_neighbor_fn`); the sharded
+    base variant instead passes `neighbor_fn=host_shard_neighbor_fn(...)`
+    (adjacency stays in host RAM, `adjacency_local=None`). PQ codes and
+    re-rank vectors are device-sharded either way.
 
     Returns (ids (B_loc, k), dists (B_loc, k), n_hops (B_loc,),
     n_iters (B_loc,)) -- all replicated over `axis` (the worklist/bloom state
@@ -138,9 +206,11 @@ def sharded_bang_search_block(
     identical results). `n_iters` is the scalar iteration count broadcast to
     the local batch so it can share the data-sharded output spec.
     """
+    if neighbor_fn is None:
+        neighbor_fn = sharded_neighbor_fn(adjacency_local, axis)
     res: SearchResult = bang_search(
         queries,
-        neighbor_fn=sharded_neighbor_fn(adjacency_local, axis),
+        neighbor_fn=neighbor_fn,
         distance_fn=sharded_adc_distance_fn(table, codes_local, axis, cfg.use_kernels),
         medoid=medoid,
         n_points=codes_local.shape[0],  # local; only used for sizing hints

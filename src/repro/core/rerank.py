@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import pure_callback
+
 from .worklist import INVALID_ID
 
 Array = jax.Array
@@ -30,7 +32,7 @@ def gather_host_vectors(data_np: np.ndarray, ids: Array) -> Array:
         return np.ascontiguousarray(data_np[safe], dtype=np.float32)
 
     shape = jax.ShapeDtypeStruct((*ids.shape, d), jnp.float32)
-    return jax.pure_callback(host_gather, shape, ids, vmap_method="sequential")
+    return pure_callback(host_gather, shape, ids)
 
 
 def exact_topk(

@@ -24,6 +24,10 @@ Variants (paper §5):
     inmem         graph on device, PQ distances (BANG In-memory)
     exact         graph + data on device, exact L2 distances, no re-ranking
                   (BANG Exact-distance)
+
+`repro.core.distributed` lifts the same loop to a device mesh ("sharded":
+graph rows device-sharded; "sharded-base": graph rows in host RAM behind
+per-shard callbacks) by swapping in sharded neighbour/distance callbacks.
 """
 from __future__ import annotations
 
@@ -34,6 +38,8 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.compat import pure_callback
 
 from . import bloom as bloomlib
 from . import pq as pqlib
@@ -145,7 +151,7 @@ def host_neighbor_fn(adjacency_np: np.ndarray) -> NeighborFn:
 
     def fn(u: Array) -> Array:
         shape = jax.ShapeDtypeStruct((u.shape[0], R), jnp.int32)
-        return jax.pure_callback(host_gather, shape, u, vmap_method="sequential")
+        return pure_callback(host_gather, shape, u)
 
     return fn
 

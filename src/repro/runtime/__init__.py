@@ -4,5 +4,5 @@
 #   serving  -- streaming micro-batch serve loop with double buffering
 from .executor import SearchExecutor, SearchHandle, bucket_size, pad_batch  # noqa: F401
 from .serving import BatchReport, ServePipeline, ServeStats  # noqa: F401
-from .sharded import ShardedSearchExecutor  # noqa: F401
+from .sharded import SHARDED_VARIANTS, ShardedSearchExecutor  # noqa: F401
 from .train_loop import TrainLoopConfig, train_loop  # noqa: F401

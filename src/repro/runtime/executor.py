@@ -7,12 +7,14 @@ buckets, compiled-executable cache, `SearchStats`):
     one accelerator; the three variants ("inmem"/"base"/"exact") reproduce
     the paper's single-GPU configurations.
   * `ShardedSearchExecutor` (`repro.runtime.sharded`) -- **mesh parallel**.
-    Adjacency, PQ codes and full vectors are sharded over the mesh's `model`
-    axis and queries over `data`, so the served graph can exceed one device's
-    memory; each hop exchanges only O(frontier) bytes via masked psums
-    (`repro.core.distributed`). Drop-in subclass: `ServePipeline` and
-    `BangIndex.search(variant="sharded", mesh=...)` drive either executor
-    through the identical interface.
+    PQ codes and full vectors are sharded over the mesh's `model` axis and
+    queries over `data`, so the served graph can exceed one device's memory;
+    each hop exchanges only O(frontier) bytes via masked psums
+    (`repro.core.distributed`). The graph itself is either device-sharded
+    (`variant="sharded"`) or host-resident behind per-shard callbacks
+    (`variant="sharded-base"`). Drop-in subclass: `ServePipeline` and
+    `BangIndex.search(variant="sharded"|"sharded-base", mesh=...)` drive
+    either executor through the identical interface.
 
 `BangIndex.search` used to re-trace the whole `lax.while_loop` pipeline and
 re-upload the adjacency on every call, so measured QPS was dominated by
@@ -249,6 +251,31 @@ class SearchExecutor:
 
     def _run(self, compiled, q_dev: Array):
         return compiled(q_dev)
+
+    # ------------------------------------------------------------ accounting
+    def exchange_bytes_per_hop(self, batch: int) -> dict:
+        """Logical link bytes one hop moves, same schema as the sharded peer.
+
+        A single device pays no inter-device collectives; the "base" variant
+        pays the paper's host link each hop -- (bucket,) int32 frontier ids
+        out and (bucket, R) int32 adjacency rows back over the pure_callback
+        (§4.1/§4.3). Device-resident-graph variants move nothing.
+        """
+        bucket = self._bucket_for(batch)
+        adj = self._adjacency_np if self._adjacency is None else self._adjacency
+        R = adj.shape[1]
+        host_ids_out = bucket * 4 if self.variant == "base" else 0
+        host_rows_in = bucket * R * 4 if self.variant == "base" else 0
+        return {
+            "payload_bytes": 0,
+            "collective_bytes": 0,
+            "ring_bytes_per_device": 0,
+            "host_ids_out_bytes": host_ids_out,
+            "host_rows_in_bytes": host_rows_in,
+            "host_link_bytes": host_ids_out + host_rows_in,
+            "model_shards": 1,
+            "data_shards": 1,
+        }
 
     # -------------------------------------------------------------- serving
     def dispatch(

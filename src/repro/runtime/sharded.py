@@ -14,6 +14,20 @@ donated `jax.jit(shard_map(...))`:
                                   bloom state replicated per model group
     stage 3  exact re-rank        owner-shard partial L2 + psum(model)
 
+Two graph placements share this executor (`variant=`):
+
+  * ``"sharded"``       adjacency rows device-sharded over `model` -- the
+                        mesh analogue of the single-device "inmem" variant.
+  * ``"sharded-base"``  adjacency stays in **host RAM**, row-partitioned per
+                        model shard and served through each shard's own
+                        `pure_callback` (`host_shard_neighbor_fn`) -- the
+                        paper's CPU neighbour service at mesh scale. No
+                        adjacency is ever uploaded; per hop each shard's
+                        host link carries only (B_loc,) frontier ids out and
+                        (B_loc, R) adjacency rows back
+                        (`exchange_bytes_per_hop()["host_link_bytes"]`).
+                        PQ codes and re-rank vectors stay device-sharded.
+
 Only the frontier crosses the wire -- per hop, per data shard, a (B_loc, R)
 int32 neighbour exchange and a (B_loc, R) f32 distance exchange
 (`exchange_bytes_per_hop`) -- the paper's PCIe frugality re-expressed as
@@ -46,13 +60,19 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import pq as pqlib
-from repro.core.distributed import pad_to_multiple, sharded_bang_search_block
+from repro.core.distributed import (
+    host_shard_neighbor_fn,
+    pad_to_multiple,
+    sharded_bang_search_block,
+)
 from repro.core.search import SearchConfig
 from repro.core.vamana import VamanaGraph
 
 from .executor import SearchExecutor, bucket_size
 
 Array = jax.Array
+
+SHARDED_VARIANTS = ("sharded", "sharded-base")
 
 
 class ShardedSearchExecutor(SearchExecutor):
@@ -66,10 +86,16 @@ class ShardedSearchExecutor(SearchExecutor):
         mesh: Mesh,
         *,
         data,
+        variant: str = "sharded",
         data_axis: str = "data",
         model_axis: str = "model",
         min_bucket: int = 8,
     ) -> None:
+        if variant not in SHARDED_VARIANTS:
+            raise ValueError(
+                f"unknown sharded variant {variant!r}, expected one of "
+                f"{SHARDED_VARIANTS}"
+            )
         if data_axis not in mesh.shape or model_axis not in mesh.shape:
             raise ValueError(
                 f"mesh axes {tuple(mesh.shape)} must include "
@@ -78,10 +104,10 @@ class ShardedSearchExecutor(SearchExecutor):
         if data is None:
             raise ValueError("sharded executor needs full vectors (re-rank source)")
         # Deliberately not super().__init__: the parent constructor places
-        # single-device state (and rejects variant="sharded"); the serving
+        # single-device state (and rejects the sharded variants); the serving
         # bookkeeping the shared dispatch/finish path relies on comes from
         # the same _init_serving_state both constructors call.
-        self.variant = "sharded"
+        self.variant = variant
         self.mesh = mesh
         self._data_axis = data_axis
         self._model_axis = model_axis
@@ -99,7 +125,20 @@ class ShardedSearchExecutor(SearchExecutor):
         data_np = pad_to_multiple(np.asarray(data, np.float32), S, 0.0)
         self.R = adjacency.shape[1]
         model_spec = NamedSharding(mesh, P(model_axis, None))
-        self._adjacency = jax.device_put(adjacency, model_spec)
+        if variant == "sharded-base":
+            # Sharded BANG Base: the graph never touches device memory. Each
+            # model shard's contiguous row block is pinned in host RAM and
+            # served through that shard's pure_callback; per hop the host
+            # link carries frontier ids out and adjacency rows back.
+            n_loc = adjacency.shape[0] // S
+            self._adjacency = None
+            self._host_partitions = [
+                np.ascontiguousarray(adjacency[s * n_loc : (s + 1) * n_loc])
+                for s in range(S)
+            ]
+        else:
+            self._adjacency = jax.device_put(adjacency, model_spec)
+            self._host_partitions = None
         self._codes = jax.device_put(codes_np, model_spec)
         self._data_dev = jax.device_put(data_np, model_spec)
         self._codebooks = jax.device_put(
@@ -121,6 +160,11 @@ class ShardedSearchExecutor(SearchExecutor):
         mesh = self.mesh
         daxis, maxis = self._data_axis, self._model_axis
         medoid = self._graph.medoid
+        host_graph = self.variant == "sharded-base"
+        neighbor_fn = (
+            host_shard_neighbor_fn(self._host_partitions, maxis)
+            if host_graph else None
+        )
 
         def pipeline(queries, codebooks, codes, adjacency, data):
             # Trace-time side effect: runs once per compiled executable.
@@ -128,19 +172,28 @@ class ShardedSearchExecutor(SearchExecutor):
             table = pqlib.build_dist_table(pqlib.PQCodec(codebooks), queries)
             return sharded_bang_search_block(
                 queries, table, codes, adjacency, data,
-                medoid, k, cfg, maxis, rerank=rerank,
+                medoid, k, cfg, maxis, rerank=rerank, neighbor_fn=neighbor_fn,
             )
 
-        sharded = shard_map(
-            pipeline,
-            mesh=mesh,
-            in_specs=(
+        # The base mode's executable takes no adjacency operand at all: the
+        # graph lives behind the per-shard host callbacks closed over above.
+        if host_graph:
+            fn = lambda q, cb, c, dt: pipeline(q, cb, c, None, dt)  # noqa: E731
+            in_specs = (P(daxis, None), P(), P(maxis, None), P(maxis, None))
+        else:
+            fn = pipeline
+            in_specs = (
                 P(daxis, None),      # queries
                 P(),                 # codebooks (replicated)
                 P(maxis, None),      # codes
                 P(maxis, None),      # adjacency
                 P(maxis, None),      # data
-            ),
+            )
+
+        sharded = shard_map(
+            fn,
+            mesh=mesh,
+            in_specs=in_specs,
             out_specs=(P(daxis, None), P(daxis, None), P(daxis), P(daxis)),
             check_rep=False,
         )
@@ -148,11 +201,14 @@ class ShardedSearchExecutor(SearchExecutor):
         q_spec = jax.ShapeDtypeStruct(
             (bucket, d), jnp.float32, sharding=self._query_sharding
         )
+        operands = (
+            (q_spec, self._codebooks, self._codes, self._data_dev)
+            if host_graph
+            else (q_spec, self._codebooks, self._codes,
+                  self._adjacency, self._data_dev)
+        )
         return (
-            jax.jit(sharded, donate_argnums=0)
-            .lower(q_spec, self._codebooks, self._codes,
-                   self._adjacency, self._data_dev)
-            .compile()
+            jax.jit(sharded, donate_argnums=0).lower(*operands).compile()
         )
 
     # ----------------------------------------------------- dispatch plumbing
@@ -166,27 +222,43 @@ class ShardedSearchExecutor(SearchExecutor):
         return jax.device_put(q_padded, self._query_sharding)
 
     def _run(self, compiled, q_dev: Array):
+        if self.variant == "sharded-base":
+            return compiled(q_dev, self._codebooks, self._codes, self._data_dev)
         return compiled(
             q_dev, self._codebooks, self._codes, self._adjacency, self._data_dev
         )
 
     # ------------------------------------------------------------ accounting
     def exchange_bytes_per_hop(self, batch: int) -> dict:
-        """Logical bytes the frontier exchange moves per hop (paper §4.3).
+        """Logical bytes one hop moves, split by link (paper §4.3).
 
-        Per data shard and hop, the model-axis psums carry a (B_loc, R) int32
-        neighbour payload plus a (B_loc, R) f32 distance payload. `ring`
-        estimates the per-device wire traffic of a ring all-reduce
-        (2·(S-1)/S x payload); S=1 meshes exchange nothing.
+        Inter-device collectives: per data shard and hop, the model-axis
+        psums carry a (B_loc, R) int32 neighbour payload plus a (B_loc, R)
+        f32 distance payload (`collective_bytes`, kept as `payload_bytes`
+        for back-compat). `ring_bytes_per_device` estimates the per-device
+        wire traffic of a ring all-reduce (2·(S-1)/S x payload); S=1 meshes
+        exchange nothing.
+
+        Host link: in the "sharded-base" mode each model shard additionally
+        pays the paper's PCIe traffic per hop -- (B_loc,) int32 frontier ids
+        out to its host partition (`host_ids_out_bytes`) and (B_loc, R)
+        int32 adjacency rows back (`host_rows_in_bytes`); their sum is
+        `host_link_bytes`, 0 when the graph is device-resident.
         """
         bucket = self._bucket_for(batch)
         b_loc = bucket // self.n_data_shards
         payload = b_loc * self.R * (4 + 4)
         S = self.n_model_shards
         ring = int(2 * (S - 1) / S * payload) if S > 1 else 0
+        host_ids_out = b_loc * 4 if self.variant == "sharded-base" else 0
+        host_rows_in = b_loc * self.R * 4 if self.variant == "sharded-base" else 0
         return {
             "payload_bytes": payload,
+            "collective_bytes": payload,
             "ring_bytes_per_device": ring,
+            "host_ids_out_bytes": host_ids_out,
+            "host_rows_in_bytes": host_rows_in,
+            "host_link_bytes": host_ids_out + host_rows_in,
             "model_shards": S,
             "data_shards": self.n_data_shards,
         }
