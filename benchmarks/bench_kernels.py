@@ -1,4 +1,5 @@
-"""Paper §4.5 reduction-scheme table, adapted to TPU (DESIGN.md §2).
+"""Paper §4.5 reduction-scheme table, adapted to TPU (DESIGN.md §2), plus the
+in-executor kernel-mode lane (fused vs staged vs XLA reference).
 
 The paper tunes atomicAdd vs CUB WarpReduce vs BlockReduce for the ADC
 accumulation. The TPU analogue is one-hot-x-table on the MXU vs per-lane
@@ -6,20 +7,124 @@ gather on the VPU vs the fused-XLA jnp reference; plus the sort/merge kernels
 against lax.sort. Interpret-mode timings on CPU measure *relative* cost of
 the lowered structure only -- the structural choice (MXU matmul vs gather) is
 what transfers to hardware.
+
+The **executor lane** measures the kernels where they matter: compiled
+inside `SearchExecutor`'s bucketed, donated jit, per batch bucket, with one
+`KERNEL_ROW_SCHEMA` JSON row per (bucket, kernel_mode) cell reporting
+steady-state QPS, per-hop wall time, and the analytic HBM traffic of the
+candidate tile (the fused megakernel crosses HBM once per hop; the staged
+path four times plus the (B, R, m) gathered-codes temporary -- the §4.5-§4.8
+fusion win the paper's shared-memory pipeline is about).
 """
 from __future__ import annotations
+
+import json
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.core import pq as pqlib
+from repro.core.search import SearchConfig
 from repro.core.worklist import Worklist
 
-from .common import timeit
+from .common import bench_dataset, timeit
+
+# The JSON schema of one executor-lane row (tests/test_kernels.py pins it).
+KERNEL_ROW_SCHEMA = frozenset({
+    "name", "us_per_query", "qps", "kernel_mode", "variant", "bucket",
+    "batch", "per_hop_us", "n_iters",
+    "hbm_candidate_roundtrips_per_hop", "hbm_intermediate_bytes_per_hop",
+    "compile_s",
+})
+
+EXEC_BATCHES = (16, 48)   # -> power-of-two buckets 16 and 64
+EXEC_T = 32
+EXEC_REPEATS = 3
+
+
+def kernel_row(
+    name: str, kernel_mode: str, variant: str, batch: int, bucket: int,
+    qps: float, us_per_query: float, per_hop_us: float, n_iters: int,
+    R: int, m: int, compile_s: float, t: int = EXEC_T,
+) -> dict:
+    """One executor-lane record conforming to KERNEL_ROW_SCHEMA."""
+    from repro.kernels.search_step import ops as step_ops
+
+    return {
+        "name": name,
+        "us_per_query": round(us_per_query, 1),
+        "qps": round(qps, 1),
+        "kernel_mode": kernel_mode,
+        "variant": variant,
+        "bucket": bucket,
+        "batch": batch,
+        "per_hop_us": round(per_hop_us, 1),
+        "n_iters": n_iters,
+        "hbm_candidate_roundtrips_per_hop":
+            step_ops.hbm_candidate_roundtrips_per_hop(kernel_mode),
+        "hbm_intermediate_bytes_per_hop":
+            step_ops.hbm_intermediate_bytes_per_hop(
+                kernel_mode, bucket, R, m, t
+            ),
+        "compile_s": round(compile_s, 2),
+    }
+
+
+def executor_lane_rows(
+    idx=None, queries=None, batches=EXEC_BATCHES, t: int = EXEC_T
+) -> list[dict]:
+    """Run the kernel modes through SearchExecutor; one row per cell.
+
+    Fresh executor per mode so the per-(bucket, cfg) compile cache attributes
+    compile time to the right cell; QPS/per-hop numbers are steady-state
+    (best of EXEC_REPEATS after a warm-up search on the same bucket).
+    """
+    from repro.runtime import SearchExecutor
+
+    if idx is None or queries is None:
+        _, queries, idx = bench_dataset()
+    R = np.asarray(idx.graph.adjacency).shape[1]
+    m = idx.codec.m
+    rows = []
+    for mode in ("fused", "staged", "reference"):
+        ex = SearchExecutor.from_index(idx, variant="inmem")
+        for batch in batches:
+            q = np.asarray(queries[:batch], np.float32)
+            cfg = SearchConfig(t=t, bloom_z=16384, kernel_mode=mode)
+            _, _, warm = ex.search(q, 10, cfg=cfg, return_stats=True)
+            best = None
+            for _ in range(EXEC_REPEATS):
+                _, _, s = ex.search(q, 10, cfg=cfg, return_stats=True)
+                if s.compile_s:
+                    raise RuntimeError("steady-state search recompiled")
+                if best is None or s.wall_s < best.wall_s:
+                    best = s
+            rows.append(kernel_row(
+                f"exec_inmem_{mode}_b{best.bucket}", mode, "inmem",
+                batch, best.bucket, best.qps,
+                best.wall_s / batch * 1e6,
+                best.wall_s / max(best.n_iters, 1) * 1e6,
+                best.n_iters, R, m, warm.compile_s, t=t,
+            ))
+    return rows
+
+
+def _executor_lane(report) -> None:
+    for row in executor_lane_rows():
+        print(f"ROWJSON,{json.dumps(row)}", flush=True)
+        report(
+            row["name"], row["us_per_query"],
+            f"qps={row['qps']:.0f},mode={row['kernel_mode']},"
+            f"bucket={row['bucket']},per_hop_us={row['per_hop_us']},"
+            f"hbm_trips={row['hbm_candidate_roundtrips_per_hop']},"
+            f"hbm_intermediate_B={row['hbm_intermediate_bytes_per_hop']},"
+            f"compile_s={row['compile_s']:.2f}",
+        )
 
 
 def run(report) -> None:
+    _executor_lane(report)
     rng = np.random.default_rng(0)
     B, R, m = 64, 64, 74
 

@@ -2,7 +2,14 @@
 plus the mesh-sharded serving sweep (the billion-scale regime's shape).
 
 CPU host stands in for the accelerator (numbers are relative, the shape of
-the QPS/recall frontier is the reproduced object). Three sweeps:
+the QPS/recall frontier is the reproduced object). Four sweeps:
+
+  * **Kernel-mode sweep** (single device): the serving workload under each
+    traversal-step implementation -- "fused" search_step megakernel vs
+    "staged" per-stage Pallas kernels vs the XLA "reference" -- measured
+    inside the executor's bucketed jit per batch bucket, emitting
+    `KERNEL_ROW_SCHEMA` JSON rows (steady-state QPS, per-hop wall time, and
+    the analytic per-hop HBM candidate-tile traffic).
 
   * **Worklist sweep** (single device): t in 16..152 exactly as the paper
     does to trace the QPS/recall curve; the brute-force scan is the exact
@@ -47,6 +54,7 @@ REPEATS = 3
 SHARDED_DEVICE_COUNTS = (1, 2, 4, 8)
 SHARDED_T = 64
 SHARDED_BATCH = 64
+EXEC_BATCHES_QPS = (16, 64)   # kernel-mode sweep buckets
 
 # The JSON schema of one sharded-sweep row (tests/test_sharded_base.py pins
 # it, including the host-link fields). `us_per_query` mirrors the CSV column.
@@ -113,7 +121,44 @@ def _steady_state(pipe: ServePipeline, queries, gt):
 
 def run(report) -> None:
     _worklist_sweep(report)
+    _kernel_mode_sweep(report)
     _device_sweep(report)
+
+
+def _kernel_mode_sweep(report) -> None:
+    """Serving QPS per traversal-step implementation (fused/staged/reference).
+
+    The kernels measured *inside* the serving pipeline (compiled into the
+    executor's bucketed jit, ServePipeline steady-state drain) rather than
+    standalone -- one `ROWJSON,<KERNEL_ROW_SCHEMA>` line per (mode, bucket)
+    cell, same machine-readable contract as the sharded sweep rows.
+    """
+    from .bench_kernels import EXEC_T, executor_lane_rows
+
+    data, queries, idx = bench_dataset()
+    gt = brute_force_knn(data, queries[:max(EXEC_BATCHES_QPS)], 10)
+    # Recall is mode-independent (bit-identical ids across kernel modes), so
+    # compute it once per batch and stamp it onto all three mode rows.
+    recall_by_batch = {}
+    for batch in EXEC_BATCHES_QPS:
+        ids, _ = idx.search(
+            np.asarray(queries[:batch], np.float32), 10,
+            cfg=SearchConfig(t=EXEC_T, bloom_z=16384),
+        )
+        recall_by_batch[batch] = round(
+            recall_at_k(np.asarray(ids), gt[:batch]), 4
+        )
+    for row in executor_lane_rows(idx, queries, batches=EXEC_BATCHES_QPS):
+        row = dict(row, recall=recall_by_batch[row["batch"]])
+        print(f"ROWJSON,{json.dumps(row)}", flush=True)
+        report(
+            f"fig5_kernelmode_{row['kernel_mode']}_b{row['bucket']}",
+            row["us_per_query"],
+            f"recall={row['recall']:.3f},qps={row['qps']:.0f},"
+            f"mode={row['kernel_mode']},per_hop_us={row['per_hop_us']},"
+            f"hbm_trips={row['hbm_candidate_roundtrips_per_hop']},"
+            f"compile_s={row['compile_s']:.2f}",
+        )
 
 
 def _worklist_sweep(report) -> None:

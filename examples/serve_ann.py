@@ -13,10 +13,12 @@ CPU-side graph service; `--variant inmem`/`exact` are the §5 variants.
 ("model"-axis) mesh -- the graph-bigger-than-one-device regime -- and
 `--variant sharded-base` is the same mesh with the graph staying in host
 RAM, row-partitioned behind one callback per model shard (the server prints
-the per-hop host-link vs collective byte split). On a CPU host `--devices N`
-forces N fake devices (set before any other use of jax in the process, which
-this entrypoint guarantees by setting XLA_FLAGS first). See `--help` for the
-full variant x placement matrix.
+the per-hop host-link vs collective byte split). `--kernel-mode fused` swaps
+the traversal step for the search_step Pallas megakernel (one pallas_call per
+hop, candidates never leave VMEM); `staged` is the per-stage kernel path. On
+a CPU host `--devices N` forces N fake devices (set before any other use of
+jax in the process, which this entrypoint guarantees by setting XLA_FLAGS
+first). See `--help` for the variant x placement and kernel-mode matrices.
 
     PYTHONPATH=src python examples/serve_ann.py --batches 5 --batch-size 128
     PYTHONPATH=src python examples/serve_ann.py --variant sharded --devices 4
@@ -37,14 +39,26 @@ import os
 
 VARIANT_MATRIX = """\
 variant matrix (distances down, graph placement across; every PQ cell is
-bit-exact vs its row-mates, and each cell also runs with use_kernels=True
-Pallas fast paths on TPU):
+bit-exact vs its row-mates, and every cell runs under each --kernel-mode
+with bit-identical neighbour ids):
 
     distances \\ placement   single device        mesh-sharded (--devices N)
     ----------------------  -------------------  --------------------------
     PQ, graph on device     inmem                sharded
     PQ, graph in host RAM   base                 sharded-base
     exact, no re-rank       exact                --
+
+kernel-mode matrix (traversal-step implementation, --kernel-mode):
+
+    mode \\ variant     inmem / base / exact      sharded / sharded-base
+    -----------------  ------------------------  --------------------------
+    reference          pure XLA (default)        XLA gather ADC + psum
+    staged             per-stage Pallas kernels  pq_adc kernel + psum,
+                       (HBM between stages)      bitonic sort/merge
+    fused              search_step megakernel:   owner-shard fused gather+
+                       whole hop in one          ADC kernel + psum, fused
+                       pallas_call, in-kernel    traverse kernel (exact L2
+                       code gather               stays outside either way)
 """
 
 
@@ -64,6 +78,11 @@ def main() -> None:
     ap.add_argument("--variant", default="inmem",
                     choices=["base", "inmem", "exact", "sharded",
                              "sharded-base"])
+    ap.add_argument("--kernel-mode", default="reference",
+                    choices=["reference", "staged", "fused"],
+                    help="traversal-step implementation (see the matrix "
+                         "below); 'fused' runs the whole hop in one Pallas "
+                         "megakernel (compiled on TPU, interpret elsewhere)")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices for the sharded variants "
                          "(0 = use whatever devices exist)")
@@ -103,7 +122,28 @@ def main() -> None:
             f"ids out + {x['host_rows_in_bytes']} B adjacency rows back = "
             f"{x['host_link_bytes']} B (graph stays in host RAM)"
         )
-    pipe = ServePipeline(executor, k=args.k, cfg=cfg, max_batch=args.max_batch)
+    if args.kernel_mode != "reference":
+        from repro.kernels.search_step import ops as step_ops
+
+        trips = step_ops.hbm_candidate_roundtrips_per_hop(args.kernel_mode)
+        if args.kernel_mode == "fused" and args.variant.startswith("sharded"):
+            # The mesh path splits the fused step: owner-shard local_adc
+            # kernel -> psum over `model` -> fused traverse kernel, so the
+            # distances cross HBM once more for the collective.
+            print(
+                "[serve] kernel-mode fused (sharded): owner-shard fused "
+                "gather+ADC kernel + psum + fused traverse kernel (candidate "
+                "tile crosses HBM once each side of the collective)"
+            )
+        else:
+            print(
+                f"[serve] kernel-mode {args.kernel_mode}: candidate tile "
+                f"crosses HBM {trips}x per hop"
+            )
+    pipe = ServePipeline(
+        executor, k=args.k, cfg=cfg, max_batch=args.max_batch,
+        kernel_mode=args.kernel_mode,
+    )
     for b in range(args.batches):
         queries = uniform_queries(data, args.batch_size, seed=100 + b)
         gt = brute_force_knn(data, queries, args.k)
@@ -127,7 +167,8 @@ def main() -> None:
     )
     print(
         f"[serve] latency p50={stats.p50_ms:.0f}ms p95={stats.p95_ms:.0f}ms | "
-        f"mean recall@{args.k}={recall} (variant={args.variant})"
+        f"mean recall@{args.k}={recall} (variant={args.variant}, "
+        f"kernel-mode={args.kernel_mode})"
     )
 
 

@@ -7,4 +7,4 @@
 #   bang               -- BangIndex public API (three-stage pipeline)
 #   distributed        -- pod-scale sharded-graph search (shard_map)
 from .bang import BangIndex, SearchStats, brute_force_knn, recall_at_k  # noqa: F401
-from .search import SearchConfig  # noqa: F401
+from .search import KERNEL_MODES, SearchConfig  # noqa: F401

@@ -7,9 +7,8 @@
 Variant x placement matrix (`search(variant=...)`): distances down, graph
 placement across. Every cell returns bit-exact ids+dists vs its row-mates
 (the PQ cells re-rank with exact L2, so their outputs agree bitwise); each
-cell also takes `SearchConfig(use_kernels=True)` to swap the sort/ADC/re-rank
-inner loops for the Pallas fast paths on TPU (or interpret mode) -- kernels
-change the schedule, not the variant semantics.
+cell also takes a `kernel_mode` -- kernels change the schedule, not the
+variant semantics, and all three modes return bit-identical neighbour ids.
 
     distances \\ placement   single device        mesh-sharded (mesh=...)
     ----------------------  -------------------  ------------------------
@@ -17,10 +16,24 @@ change the schedule, not the variant semantics.
     PQ, graph in host RAM   "base"               "sharded-base"
     exact, no re-rank       "exact"              --
 
+    kernel_mode \\ variant   inmem / base / exact   sharded / sharded-base
+    ----------------------  ---------------------  -------------------------
+    "reference" (default)   pure-XLA body          XLA gather ADC + psum
+    "staged"                per-stage Pallas       pq_adc kernel + psum,
+                            kernels (ADC, sort,    bitonic sort/merge
+                            merge; HBM between)
+    "fused"                 search_step mega-      owner-shard fused
+                            kernel: whole hop in   gather+ADC kernel + psum,
+                            one pallas_call,       fused traverse kernel
+                            in-kernel code gather  ("exact" keeps L2 outside
+                                                   the kernel either way)
+
 "base"/"sharded-base" are BANG proper (paper §5): the graph stays in host
 RAM behind pure_callback neighbour services (one per model shard in the
 sharded case) and only frontier ids / adjacency rows cross the host link.
 "inmem"/"sharded" are BANG In-memory; "exact" is BANG Exact-distance.
+Legacy `SearchConfig(use_kernels=True)` is an alias for
+`kernel_mode="staged"`.
 """
 from __future__ import annotations
 
@@ -161,22 +174,26 @@ class BangIndex:
         cfg: SearchConfig | None = None,
         return_stats: bool = False,
         mesh=None,
+        kernel_mode: str | None = None,
     ) -> tuple[Array, Array] | tuple[Array, Array, SearchStats]:
         """Batched k-NN search. Returns (ids (B, k), dists (B, k)).
 
         Delegates to the per-variant executor: the three-stage pipeline
         (PQ table -> traversal -> re-rank) runs as one compiled executable,
         cached per query-batch shape bucket, with index state resident on
-        device. Repeated searches with the same (bucket, t, k, variant)
-        never retrace. With `return_stats=True` the stats separate
-        steady-state wall time from compile time. `variant="sharded"` /
-        `"sharded-base"` (with an optional `mesh=`) serve from index state
-        sharded across devices — the latter with the graph in host RAM
-        behind per-shard callbacks; results are bit-exact equal to the
-        single-device variants.
+        device. Repeated searches with the same (bucket, t, k, variant,
+        kernel_mode) never retrace. With `return_stats=True` the stats
+        separate steady-state wall time from compile time.
+        `variant="sharded"` / `"sharded-base"` (with an optional `mesh=`)
+        serve from index state sharded across devices — the latter with the
+        graph in host RAM behind per-shard callbacks; results are bit-exact
+        equal to the single-device variants. `kernel_mode` picks the
+        traversal-step implementation ("reference" | "staged" | "fused", see
+        the module docstring matrix); all modes return bit-identical ids.
         """
         return self.executor(variant, mesh=mesh).search(
-            queries, k, t=t, cfg=cfg, rerank=rerank, return_stats=return_stats,
+            queries, k, t=t, cfg=cfg, rerank=rerank,
+            return_stats=return_stats, kernel_mode=kernel_mode,
         )
 
 

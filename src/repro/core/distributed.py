@@ -44,7 +44,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import pure_callback, shard_map
 
 from . import pq as pqlib
-from .search import SearchConfig, SearchResult, bang_search
+from .search import SearchConfig, SearchResult, bang_search, make_step_fn
 from .worklist import INVALID_ID
 
 Array = jax.Array
@@ -136,22 +136,43 @@ def host_shard_neighbor_fn(
 
 
 def sharded_adc_distance_fn(
-    table: Array, codes_local: Array, axis: str = "model", use_kernels: bool = False
+    table: Array,
+    codes_local: Array,
+    axis: str = "model",
+    use_kernels: bool = False,
+    *,
+    kernel_mode: str | None = None,
 ):
     """Owner-computed ADC distances + psum (§4.5 at pod scale).
 
     table: (B, m, 256) replicated over `axis`; codes_local: (n_loc, m).
+    kernel_mode (falls back to the legacy use_kernels flag):
+
+      "reference"  XLA gather + take_along_axis ADC
+      "staged"     XLA gather into a (B, R, m) HBM temporary + pq_adc kernel
+      "fused"      search_step.local_adc -- the gather happens *inside* the
+                   kernel on the shard's VMEM-resident codes block, masked to
+                   the rows this shard owns; no HBM temporary.
+
+    All three contribute bit-identical owner rows (0 elsewhere), so the psum
+    reconstruction -- and therefore the traversal -- is mode-independent.
     """
     n_loc = codes_local.shape[0]
+    mode = kernel_mode or ("staged" if use_kernels else "reference")
 
     def fn(ids: Array, valid: Array) -> Array:
         rel, own = _owned(n_loc, ids, axis)
-        gathered = codes_local[rel]                       # (B, R, m)
-        if use_kernels:
+        if mode == "fused":
+            from repro.kernels.search_step import ops as step_ops
+
+            d = step_ops.local_adc(table, codes_local, rel, own)
+        elif mode == "staged":
             from repro.kernels.pq_adc import ops as adc_ops
 
+            gathered = codes_local[rel]                   # (B, R, m)
             d = adc_ops.adc(table, gathered, own)
         else:
+            gathered = codes_local[rel]                   # (B, R, m)
             d = pqlib.adc_distance(table, gathered)
         d = jnp.where(own & valid, d, 0.0)
         d = jax.lax.psum(d, axis)
@@ -208,10 +229,17 @@ def sharded_bang_search_block(
     """
     if neighbor_fn is None:
         neighbor_fn = sharded_neighbor_fn(adjacency_local, axis)
+    # The same StepFn boundary as the single-device loop: the fused mode runs
+    # owner-shard gather+ADC inside search_step.local_adc, the psum crosses
+    # the mesh, and sort+select+merge run in the fused traverse kernel on the
+    # reconstructed rows.
+    distance_fn = sharded_adc_distance_fn(
+        table, codes_local, axis, kernel_mode=cfg.resolved_kernel_mode()
+    )
     res: SearchResult = bang_search(
         queries,
         neighbor_fn=neighbor_fn,
-        distance_fn=sharded_adc_distance_fn(table, codes_local, axis, cfg.use_kernels),
+        step_fn=make_step_fn(cfg, distance_fn),
         medoid=medoid,
         n_points=codes_local.shape[0],  # local; only used for sizing hints
         cfg=cfg,

@@ -8,8 +8,8 @@ little work). Each iteration performs exactly the paper's stages:
 
     fetch neighbours of u*        (CPU in BANG Base; device gather in-memory)
     bloom-filter visited           (§4.4)
-    PQ asymmetric distances        (§4.5; Pallas kernel on TPU)
-    sort neighbours                (§4.7; bitonic kernel)
+    PQ asymmetric distances        (§4.5)
+    sort neighbours                (§4.7)
     merge into worklist 𝓛          (§4.8; merge-path)
     select next candidate u*       (§4.6 eager selection overlaps the fetch
                                     with sort+merge -- realised here as
@@ -17,6 +17,21 @@ little work). Each iteration performs exactly the paper's stages:
                                     the *pre-selected* candidate, so XLA can
                                     schedule its gather before/alongside the
                                     merge of the previous iteration)
+
+The distance/sort/select/merge stages live behind a single pluggable
+**StepFn** boundary (`SearchConfig.kernel_mode`):
+
+    "reference"  pure XLA: take_along_axis ADC + lax.sort (the oracle path)
+    "staged"     separate Pallas kernels per stage (pq_adc / bitonic sort /
+                 bitonic merge) -- the (B, R) candidate tile round-trips HBM
+                 between every stage
+    "fused"      the search_step megakernel: one pallas_call per iteration
+                 executes the whole body in VMEM (in-kernel code gather, so
+                 no (B, R, m) HBM temporary either); candidates touch HBM
+                 once per hop
+
+All three produce bit-identical neighbour ids (tests pin this); the legacy
+`use_kernels=True` flag is an alias for kernel_mode="staged".
 
 Variants (paper §5):
     base          graph + full vectors on the host (pure_callback adjacency
@@ -27,12 +42,12 @@ Variants (paper §5):
 
 `repro.core.distributed` lifts the same loop to a device mesh ("sharded":
 graph rows device-sharded; "sharded-base": graph rows in host RAM behind
-per-shard callbacks) by swapping in sharded neighbour/distance callbacks.
+per-shard callbacks) by passing its own StepFn built on sharded
+neighbour/distance collectives.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable, NamedTuple
 
 import jax
@@ -55,6 +70,8 @@ from .worklist import (
 
 Array = jax.Array
 
+KERNEL_MODES = ("reference", "staged", "fused")
+
 
 @dataclasses.dataclass(frozen=True)
 class SearchConfig:
@@ -62,10 +79,26 @@ class SearchConfig:
     max_iters: int = 0           # 0 -> ceil(1.5*t)+8 (Fig 10 headroom)
     bloom_z: int = 399887        # paper §6.3 default
     eager: bool = True           # §4.6 eager candidate selection
-    use_kernels: bool = False    # Pallas fast paths (TPU / interpret)
+    use_kernels: bool = False    # legacy alias for kernel_mode="staged"
+    kernel_mode: str | None = None  # "reference" | "staged" | "fused"
 
     def iters(self) -> int:
         return self.max_iters if self.max_iters > 0 else int(1.5 * self.t) + 8
+
+    def resolved_kernel_mode(self) -> str:
+        """Explicit kernel_mode wins; else the legacy use_kernels flag."""
+        if self.kernel_mode is not None:
+            if self.kernel_mode not in KERNEL_MODES:
+                raise ValueError(
+                    f"unknown kernel_mode {self.kernel_mode!r}, expected one "
+                    f"of {KERNEL_MODES}"
+                )
+            return self.kernel_mode
+        return "staged" if self.use_kernels else "reference"
+
+    def uses_kernels(self) -> bool:
+        """Whether any Pallas fast path (incl. re-rank) should be used."""
+        return self.resolved_kernel_mode() != "reference"
 
 
 class SearchResult(NamedTuple):
@@ -90,8 +123,182 @@ NeighborFn = Callable[[Array], Array]     # (B,) ids -> (B, R) neighbour ids
 DistanceFn = Callable[[Array, Array], Array]  # ids (B,R), valid -> dists (B,R)
 
 
+# ---------------------------------------------------------------------------
+# StepFn: the per-iteration body (§4.5 distances + §4.7 sort + §4.6 select +
+# §4.8 merge) behind one pluggable boundary.
+# ---------------------------------------------------------------------------
+
+class StepFn:
+    """One Algorithm-2 iteration body.
+
+    `init_dists(ids, valid)` seeds the worklist (medoid distance);
+    `step(wl, nbrs, fresh, active)` consumes the bloom-filtered neighbour
+    tile and returns `(worklist', u_next, active')` with the §4.6 selection
+    applied and the selected slot already marked visited.
+    """
+
+    eager: bool = True
+
+    def init_dists(self, ids: Array, valid: Array) -> Array:
+        raise NotImplementedError
+
+    def step(
+        self, wl: Worklist, nbrs: Array, fresh: Array, active: Array
+    ) -> tuple[Worklist, Array, Array]:
+        raise NotImplementedError
+
+
+class ReferenceStep(StepFn):
+    """Pure-XLA body: gather ADC (via distance_fn) + lax.sort sort/merge."""
+
+    def __init__(self, distance_fn: DistanceFn, eager: bool = True) -> None:
+        self.distance_fn = distance_fn
+        self.eager = eager
+
+    def init_dists(self, ids: Array, valid: Array) -> Array:
+        return self.distance_fn(ids, valid)
+
+    def _sort(self, d: Array, i: Array) -> tuple[Array, Array]:
+        return sort_candidates(d, i)
+
+    def _merge(self, wl: Worklist, sd: Array, si: Array) -> Worklist:
+        return merge_worklist(wl, sd, si)
+
+    def step(
+        self, wl: Worklist, nbrs: Array, fresh: Array, active: Array
+    ) -> tuple[Worklist, Array, Array]:
+        # 3. PQ (or exact) distances for fresh neighbours.
+        d = self.distance_fn(nbrs, fresh)
+        cand_ids = jnp.where(fresh, nbrs, INVALID_ID)
+
+        # 4. Sort the candidate list (parallel merge sort / bitonic kernel).
+        sd, si = self._sort(d, cand_ids)
+
+        # 5. Candidate selection. Eager (§4.6): best of {first unvisited in
+        #    the *pre-merge* worklist, nearest fresh neighbour} -- computable
+        #    before the merge. Lazy: first unvisited of the merged worklist.
+        if self.eager:
+            wl_u, wl_found = first_unvisited(wl)
+            wl_d = jnp.where(
+                wl_found,
+                jnp.min(jnp.where(wl.visited, jnp.inf, wl.dists), axis=-1),
+                jnp.inf,
+            )
+            cand_best_d, cand_best_i = sd[:, 0], si[:, 0]
+            take_cand = cand_best_d < wl_d
+            u_next = jnp.where(take_cand, cand_best_i, wl_u)
+            found = wl_found | (cand_best_i != INVALID_ID)
+            wl = self._merge(wl, sd, si)
+        else:
+            wl = self._merge(wl, sd, si)
+            u_next, found = first_unvisited(wl)
+
+        active = active & found
+        u_next = jnp.where(active, u_next, INVALID_ID)
+        wl = mark_visited(wl, u_next)
+        return wl, u_next, active
+
+
+class StagedStep(ReferenceStep):
+    """Per-stage Pallas kernels (pq_adc / bitonic): the legacy use_kernels
+    path -- each stage is its own pallas_call with the (B, R) candidate tile
+    round-tripping HBM between them."""
+
+    def _sort(self, d: Array, i: Array) -> tuple[Array, Array]:
+        from repro.kernels.bitonic import ops as bitonic_ops
+
+        return bitonic_ops.sort_kv(d, i)
+
+    def _merge(self, wl: Worklist, sd: Array, si: Array) -> Worklist:
+        from repro.kernels.bitonic import ops as bitonic_ops
+
+        return bitonic_ops.merge_worklist(wl, sd, si)
+
+
+class FusedTraverseStep(StepFn):
+    """Distances from `distance_fn`, sort+select+merge in one fused kernel.
+
+    Used when the distance stage cannot live inside the kernel: the exact
+    variant (full-vector L2) and the sharded executors (owner-shard ADC +
+    psum over `model` must cross the mesh between ADC and sort).
+    """
+
+    def __init__(self, distance_fn: DistanceFn, eager: bool = True) -> None:
+        self.distance_fn = distance_fn
+        self.eager = eager
+
+    def init_dists(self, ids: Array, valid: Array) -> Array:
+        return self.distance_fn(ids, valid)
+
+    def step(
+        self, wl: Worklist, nbrs: Array, fresh: Array, active: Array
+    ) -> tuple[Worklist, Array, Array]:
+        from repro.kernels.search_step import ops as step_ops
+
+        d = self.distance_fn(nbrs, fresh)
+        cand_ids = jnp.where(fresh, nbrs, INVALID_ID)
+        return step_ops.fused_traverse(wl, d, cand_ids, active, eager=self.eager)
+
+
+class FusedStep(StepFn):
+    """The whole iteration body in one search_step megakernel.
+
+    The code gather happens *inside* the kernel (satisfying the VMEM-only
+    candidate path): no (B, R, m) gathered-codes HBM temporary, no (B, R)
+    intermediate tiles between stages.
+    """
+
+    def __init__(self, table: Array, codes: Array, eager: bool = True) -> None:
+        self.table = table
+        self.codes = codes
+        self.eager = eager
+
+    def init_dists(self, ids: Array, valid: Array) -> Array:
+        # One-off medoid seeding: same one-hot ADC kernel as the staged path
+        # (one candidate per query; keeping the op sequence identical keeps
+        # the fused and staged traversals bit-identical from iteration 0).
+        from repro.kernels.pq_adc import ops as adc_ops
+
+        safe = jnp.where(valid, ids, 0)
+        d = adc_ops.adc(self.table, self.codes[safe].astype(jnp.int32), valid)
+        return jnp.where(valid, d, jnp.inf)
+
+    def step(
+        self, wl: Worklist, nbrs: Array, fresh: Array, active: Array
+    ) -> tuple[Worklist, Array, Array]:
+        from repro.kernels.search_step import ops as step_ops
+
+        return step_ops.fused_step(
+            self.table, self.codes, wl, nbrs, fresh, active, eager=self.eager
+        )
+
+
+def make_step_fn(cfg: SearchConfig, distance_fn: DistanceFn) -> StepFn:
+    """StepFn for a pluggable distance source (sharded / exact paths)."""
+    mode = cfg.resolved_kernel_mode()
+    if mode == "fused":
+        return FusedTraverseStep(distance_fn, cfg.eager)
+    if mode == "staged":
+        return StagedStep(distance_fn, cfg.eager)
+    return ReferenceStep(distance_fn, cfg.eager)
+
+
+def _adc_step_fn(table: Array, codes: Array, cfg: SearchConfig) -> StepFn:
+    """StepFn for the PQ variants: fused gets the full megakernel (in-kernel
+    code gather); staged/reference keep the XLA gather in the DistanceFn."""
+    mode = cfg.resolved_kernel_mode()
+    if mode == "fused":
+        return FusedStep(table, codes, cfg.eager)
+    return make_step_fn(cfg, _adc_distance_fn(table, codes, mode == "staged"))
+
+
 def _adc_distance_fn(table: Array, codes: Array, use_kernels: bool) -> DistanceFn:
-    """PQ asymmetric distances for candidate ids (paper §4.5)."""
+    """PQ asymmetric distances for candidate ids (paper §4.5).
+
+    The XLA `codes[safe]` gather materialises a (B, R, m) temporary in HBM
+    before the distance math -- exactly what the fused StepFn avoids by
+    gathering inside the megakernel.
+    """
 
     def fn(ids: Array, valid: Array) -> Array:
         safe = jnp.where(valid, ids, 0)
@@ -156,39 +363,34 @@ def host_neighbor_fn(adjacency_np: np.ndarray) -> NeighborFn:
     return fn
 
 
-def _sort_cands(d: Array, i: Array, use_kernels: bool) -> tuple[Array, Array]:
-    if use_kernels:
-        from repro.kernels.bitonic import ops as bitonic_ops
-
-        return bitonic_ops.sort_kv(d, i)
-    return sort_candidates(d, i)
-
-
-def _merge(wl: Worklist, d: Array, i: Array, use_kernels: bool) -> Worklist:
-    if use_kernels:
-        from repro.kernels.bitonic import ops as bitonic_ops
-
-        return bitonic_ops.merge_worklist(wl, d, i)
-    return merge_worklist(wl, d, i)
-
-
 def bang_search(
     queries: Array,
     *,
     neighbor_fn: NeighborFn,
-    distance_fn: DistanceFn,
+    distance_fn: DistanceFn | None = None,
+    step_fn: StepFn | None = None,
     medoid: int,
     n_points: int,
     cfg: SearchConfig,
 ) -> SearchResult:
-    """Run Algorithm 2 for a batch of queries. Pure function of its inputs."""
+    """Run Algorithm 2 for a batch of queries. Pure function of its inputs.
+
+    The iteration body is `step_fn` (built from `cfg.kernel_mode` +
+    `distance_fn` when not given explicitly); the neighbour source stays a
+    separate callback because it is what the variants change (device gather,
+    host callback, sharded collective).
+    """
+    if step_fn is None:
+        if distance_fn is None:
+            raise ValueError("bang_search needs distance_fn or step_fn")
+        step_fn = make_step_fn(cfg, distance_fn)
     B = queries.shape[0]
     t, C = cfg.t, cfg.iters()
 
     # --- Initialisation: 𝓛 = {medoid}, bloom = {medoid} (Algorithm 2 line 2).
     med = jnp.full((B,), medoid, jnp.int32)
     med_valid = jnp.ones((B, 1), jnp.bool_)
-    med_d = distance_fn(med[:, None], med_valid)[:, 0]          # (B,)
+    med_d = step_fn.init_dists(med[:, None], med_valid)[:, 0]   # (B,)
     wl0 = worklist_init(B, t)
     wl0 = Worklist(
         dists=wl0.dists.at[:, 0].set(med_d),
@@ -221,35 +423,10 @@ def bang_search(
         # 2. Bloom filter: drop already-seen neighbours, insert fresh ones.
         fresh, filt = bloomlib.bloom_query_and_set(s.filt, nbrs, valid)
 
-        # 3. PQ (or exact) distances for fresh neighbours.
-        d = distance_fn(nbrs, fresh)
-        cand_ids = jnp.where(fresh, nbrs, INVALID_ID)
-
-        # 4. Sort the candidate list (parallel merge sort / bitonic kernel).
-        sd, si = _sort_cands(d, cand_ids, cfg.use_kernels)
-
-        # 5. Candidate selection. Eager (§4.6): best of {first unvisited in
-        #    the *pre-merge* worklist, nearest fresh neighbour} -- computable
-        #    before the merge. Lazy: first unvisited of the merged worklist.
-        if cfg.eager:
-            wl_u, wl_found = first_unvisited(s.wl)
-            wl_d = jnp.where(
-                wl_found,
-                jnp.min(jnp.where(s.wl.visited, jnp.inf, s.wl.dists), axis=-1),
-                jnp.inf,
-            )
-            cand_best_d, cand_best_i = sd[:, 0], si[:, 0]
-            take_cand = cand_best_d < wl_d
-            u_next = jnp.where(take_cand, cand_best_i, wl_u)
-            found = wl_found | (cand_best_i != INVALID_ID)
-            wl = _merge(s.wl, sd, si, cfg.use_kernels)
-        else:
-            wl = _merge(s.wl, sd, si, cfg.use_kernels)
-            u_next, found = first_unvisited(wl)
-
-        active = s.active & found
-        u_next = jnp.where(active, u_next, INVALID_ID)
-        wl = mark_visited(wl, u_next)
+        # 3-5. Distances + sort + select + merge: the StepFn boundary
+        #    ("reference" XLA / "staged" per-stage kernels / "fused"
+        #    megakernel -- one pallas_call, candidates never leave VMEM).
+        wl, u_next, active = step_fn.step(s.wl, nbrs, fresh, s.active)
 
         # 6. Record the expansion for re-ranking (paper: every candidate sent
         #    to the CPU is retained for the final re-rank).
@@ -287,7 +464,7 @@ def search_inmem(
     return bang_search(
         queries,
         neighbor_fn=device_neighbor_fn(adjacency),
-        distance_fn=_adc_distance_fn(table, codes, cfg.use_kernels),
+        step_fn=_adc_step_fn(table, codes, cfg),
         medoid=medoid,
         n_points=codes.shape[0],
         cfg=cfg,
@@ -305,7 +482,7 @@ def search_base(
     return bang_search(
         queries,
         neighbor_fn=host_neighbor_fn(adjacency_np),
-        distance_fn=_adc_distance_fn(table, codes, cfg.use_kernels),
+        step_fn=_adc_step_fn(table, codes, cfg),
         medoid=medoid,
         n_points=codes.shape[0],
         cfg=cfg,
@@ -319,10 +496,13 @@ def search_exact(
     medoid: int,
     cfg: SearchConfig,
 ) -> SearchResult:
+    # Exact distances come from full vectors, so even "fused" keeps the
+    # distance stage outside the kernel (FusedTraverseStep).
+    dist = _exact_distance_fn(data, queries.astype(jnp.float32))
     return bang_search(
         queries,
         neighbor_fn=device_neighbor_fn(adjacency),
-        distance_fn=_exact_distance_fn(data, queries.astype(jnp.float32)),
+        step_fn=make_step_fn(cfg, dist),
         medoid=medoid,
         n_points=data.shape[0],
         cfg=cfg,

@@ -66,8 +66,13 @@ def _compare_exchange(d, i, v, j: int, k: int):
     return d, i, v
 
 
-def _bitonic_stages(d, i, v, n: int, full_sort: bool):
-    """full_sort: complete network; else only the final merge phase (k=n)."""
+def bitonic_stages(d, i, v, n: int, full_sort: bool):
+    """full_sort: complete network; else only the final merge phase (k=n).
+
+    Pure function of (B, n) jnp values -- usable from any Pallas kernel body,
+    including the fused search_step megakernel (repro.kernels.search_step),
+    which reuses it so the fused and staged sort/merge stay bit-identical.
+    """
     ks = []
     if full_sort:
         k = 2
@@ -87,7 +92,7 @@ def _bitonic_stages(d, i, v, n: int, full_sort: bool):
 def _sort_kernel(d_ref, i_ref, out_d_ref, out_i_ref, *, n: int):
     d, i = d_ref[...], i_ref[...]
     v = jnp.zeros_like(i)
-    d, i, _ = _bitonic_stages(d, i, v, n, full_sort=True)
+    d, i, _ = bitonic_stages(d, i, v, n, full_sort=True)
     out_d_ref[...] = d
     out_i_ref[...] = i
 
@@ -101,7 +106,7 @@ def _merge_kernel(
     i = jnp.concatenate([i1_ref[...], i2_ref[...][:, ::-1]], axis=-1)
     v2 = jnp.zeros_like(i2_ref[...])
     v = jnp.concatenate([v1_ref[...], v2[:, ::-1]], axis=-1)
-    d, i, v = _bitonic_stages(d, i, v, n, full_sort=False)
+    d, i, v = bitonic_stages(d, i, v, n, full_sort=False)
     out_d_ref[...] = d[:, :t]
     out_i_ref[...] = i[:, :t]
     out_v_ref[...] = v[:, :t]

@@ -31,26 +31,37 @@ from jax.experimental import pallas as pl
 MC = 8  # subspaces contracted per MXU step: onehot chunk (R, MC*256) f32
 
 
-def _adc_onehot_kernel(table_ref, codes_ref, valid_ref, out_ref):
-    # table (1, m, 256) f32 | codes (1, R, m) i32 | valid (1, R) i32 -> (1, R) f32
-    m = table_ref.shape[1]
-    R = codes_ref.shape[1]
+def onehot_adc_accumulate(tbl, cod):
+    """Chunked one-hot x table MXU contraction: (m, 256) f32, (R, m) i32 -> (R,).
+
+    The shared ADC inner loop: also the §4.5 stage of the fused search_step
+    megakernel (repro.kernels.search_step), which must accumulate in exactly
+    this op sequence so the fused and staged paths stay bit-identical. m must
+    already be padded to a multiple of MC (zero table rows are neutral).
+    """
+    m = tbl.shape[0]
+    R = cod.shape[0]
 
     def chunk(c, acc):
-        tbl = table_ref[0, pl.dslice(c * MC, MC), :]              # (MC, 256)
-        cod = codes_ref[0, :, pl.dslice(c * MC, MC)]              # (R, MC)
+        tb = jax.lax.dynamic_slice(tbl, (c * MC, 0), (MC, 256))   # (MC, 256)
+        cd = jax.lax.dynamic_slice(cod, (0, c * MC), (R, MC))     # (R, MC)
         iota = jax.lax.broadcasted_iota(jnp.int32, (R, MC, 256), 2)
-        onehot = (cod[:, :, None] == iota).astype(jnp.float32)    # (R, MC, 256)
+        onehot = (cd[:, :, None] == iota).astype(jnp.float32)     # (R, MC, 256)
         # contraction (R, MC*256) @ (MC*256,) on the MXU
         partial = jax.lax.dot_general(
             onehot.reshape(R, MC * 256),
-            tbl.reshape(MC * 256, 1),
+            tb.reshape(MC * 256, 1),
             (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         )[:, 0]
         return acc + partial
 
-    acc = jax.lax.fori_loop(0, m // MC, chunk, jnp.zeros((R,), jnp.float32))
+    return jax.lax.fori_loop(0, m // MC, chunk, jnp.zeros((R,), jnp.float32))
+
+
+def _adc_onehot_kernel(table_ref, codes_ref, valid_ref, out_ref):
+    # table (1, m, 256) f32 | codes (1, R, m) i32 | valid (1, R) i32 -> (1, R) f32
+    acc = onehot_adc_accumulate(table_ref[0], codes_ref[0])
     out_ref[0, :] = jnp.where(valid_ref[0, :] > 0, acc, jnp.inf)
 
 

@@ -1,0 +1,22 @@
+"""Fused traversal-step megakernel (§4.5-§4.8 in one pallas_call)."""
+from . import ops
+from .ops import (
+    fused_step,
+    fused_traverse,
+    hbm_candidate_roundtrips_per_hop,
+    hbm_intermediate_bytes_per_hop,
+    local_adc,
+    step_ref,
+    traverse_ref,
+)
+
+__all__ = [
+    "ops",
+    "fused_step",
+    "fused_traverse",
+    "local_adc",
+    "step_ref",
+    "traverse_ref",
+    "hbm_candidate_roundtrips_per_hop",
+    "hbm_intermediate_bytes_per_hop",
+]

@@ -1,0 +1,115 @@
+"""Jitted public wrappers for the fused search_step megakernel.
+
+`fused_step` runs one whole Algorithm-2 iteration (in-kernel code gather +
+ADC + sort + §4.6 selection + merge + mark-visited) per grid program;
+`fused_traverse` is the distances-precomputed variant the sharded executors
+use after their owner-ADC psum; `local_adc` is that owner-shard fused
+gather+ADC. All dispatch to compiled Pallas on TPU and interpret elsewhere,
+like every kernel package here.
+
+`hbm_candidate_roundtrips_per_hop` / `hbm_intermediate_bytes_per_hop` are the
+analytic HBM-traffic model the in-executor benchmark lane and the tests pin:
+the staged path bounces the (B, R) candidate tile through HBM at every
+kernel boundary (gathered codes in, ADC distances out/in, sorted tile
+out/in), the fused path reads it exactly once and materialises no
+intermediates.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.worklist import Worklist
+from repro.kernels.common import interpret_mode
+
+from .ref import step_ref, traverse_ref
+from .search_step import (
+    fused_step_pallas,
+    fused_traverse_pallas,
+    local_adc_pallas,
+)
+
+
+def fused_step(
+    table: jax.Array,
+    codes: jax.Array,
+    wl: Worklist,
+    nbrs: jax.Array,
+    fresh: jax.Array,
+    active: jax.Array,
+    *,
+    eager: bool = True,
+) -> tuple[Worklist, jax.Array, jax.Array]:
+    """One fused iteration: returns (worklist', u_next (B,), active' (B,))."""
+    d, i, v, u, a = fused_step_pallas(
+        table, codes, nbrs, fresh, wl.dists, wl.ids, wl.visited, active,
+        eager=eager, interpret=interpret_mode(),
+    )
+    return Worklist(d, i, v), u, a
+
+
+def fused_traverse(
+    wl: Worklist,
+    cand_dists: jax.Array,
+    cand_ids: jax.Array,
+    active: jax.Array,
+    *,
+    eager: bool = True,
+) -> tuple[Worklist, jax.Array, jax.Array]:
+    """Fused sort+select+merge on precomputed candidate distances."""
+    d, i, v, u, a = fused_traverse_pallas(
+        cand_dists, cand_ids, wl.dists, wl.ids, wl.visited, active,
+        eager=eager, interpret=interpret_mode(),
+    )
+    return Worklist(d, i, v), u, a
+
+
+def local_adc(
+    table: jax.Array, codes_local: jax.Array, rel: jax.Array, own: jax.Array
+) -> jax.Array:
+    """Owner-shard fused gather+ADC: (B, R) contributions, 0 where not owned."""
+    return local_adc_pallas(
+        table, codes_local, rel, own, interpret=interpret_mode()
+    )
+
+
+# ---------------------------------------------------------------- accounting
+def hbm_candidate_roundtrips_per_hop(mode: str) -> int:
+    """How many times one hop's (B, R) candidate tile crosses HBM.
+
+    staged: ADC writes it, sort reads+writes it, merge reads it -- four
+    crossings at the pallas_call boundaries (the reference XLA path has the
+    same four logical stage boundaries; XLA may fuse some). fused: the tile
+    enters the megakernel once and every intermediate stays in VMEM.
+    """
+    return {"fused": 1, "staged": 4, "reference": 4}[mode]
+
+
+def hbm_intermediate_bytes_per_hop(
+    mode: str, batch: int, R: int, m: int, t: int
+) -> int:
+    """HBM bytes of *intermediates* one hop materialises between stages.
+
+    Counts only arrays that exist in HBM between kernel stages (not the
+    stage inputs the loop state already owns: neighbour ids, bloom filter,
+    worklist). staged: the (B, R, m) i32 gathered-codes temporary feeding the
+    ADC kernel, the (B, R) f32 ADC output, the sorted (B, R) f32+i32 tile out
+    of the sort kernel. fused: none -- the gather, distances and sorted tile
+    live only in VMEM.
+    """
+    if mode == "fused":
+        return 0
+    gathered_codes = batch * R * m * 4        # i32 temp before the ADC kernel
+    adc_out = batch * R * 4                   # f32 distances
+    sorted_tile = batch * R * (4 + 4)         # f32 dists + i32 ids
+    return gathered_codes + adc_out + sorted_tile
+
+
+__all__ = [
+    "fused_step",
+    "fused_traverse",
+    "local_adc",
+    "step_ref",
+    "traverse_ref",
+    "hbm_candidate_roundtrips_per_hop",
+    "hbm_intermediate_bytes_per_hop",
+]

@@ -1,0 +1,105 @@
+"""Pure-jnp oracle for the fused search_step megakernel.
+
+Same contract as `ops.fused_step` / `ops.fused_traverse`: one whole
+Algorithm-2 iteration body (ADC -> sort -> select -> merge -> mark-visited),
+expressed with the XLA gather + `lax.sort` reference ops. Real candidate keys
+are unique (the bloom filter keeps duplicates out of the worklist), so the
+two-key lexicographic sort is a total order and the kernel must match the
+oracle *exactly* on ids/visited -- and on distances too whenever the ADC sums
+are exactly representable (the property tests use integer-valued tables for
+this reason).
+
+Padding semantics pinned here (and mirrored by the kernel): masked candidate
+lanes carry (+inf, INVALID, unvisited); after the merge every INVALID slot in
+the kept prefix is forced visited -- INVALID is never expandable, and this
+closes the gap between the stable reference sort (which keeps the worklist's
+visited pads) and the unstable bitonic network (which may shuffle tied pads).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INVALID = jnp.int32(2**31 - 1)
+
+
+def _first_unvisited(ids: jax.Array, visited: jax.Array):
+    unvis = ~visited
+    found = jnp.any(unvis, axis=-1)
+    pos = jnp.argmax(unvis, axis=-1)
+    u = jnp.take_along_axis(ids, pos[:, None], axis=-1)[:, 0]
+    return jnp.where(found, u, INVALID), found
+
+
+def traverse_ref(
+    cand_dists: jax.Array,   # (B, R) f32, +inf on masked lanes
+    cand_ids: jax.Array,     # (B, R) i32, INVALID on masked lanes
+    wld: jax.Array,          # (B, t) f32
+    wli: jax.Array,          # (B, t) i32
+    wlv: jax.Array,          # (B, t) bool
+    active: jax.Array,       # (B,) bool
+    *,
+    eager: bool = True,
+):
+    """Sort + select + merge + mark-visited; returns (d, i, v, u_next, active)."""
+    t = wld.shape[1]
+    sd, si = jax.lax.sort(
+        (cand_dists.astype(jnp.float32), cand_ids.astype(jnp.int32)),
+        dimension=-1, num_keys=2,
+    )
+
+    def merge():
+        d = jnp.concatenate([wld, sd], axis=-1)
+        i = jnp.concatenate([wli, si], axis=-1)
+        v = jnp.concatenate([wlv, jnp.zeros_like(si, jnp.bool_)], axis=-1)
+        md, mi, mv = jax.lax.sort(
+            (d, i, v.astype(jnp.int32)), dimension=-1, num_keys=2
+        )
+        md, mi, mv = md[:, :t], mi[:, :t], mv[:, :t].astype(jnp.bool_)
+        return md, mi, mv | (mi == INVALID)
+
+    if eager:
+        wl_u, wl_found = _first_unvisited(wli, wlv)
+        wl_d = jnp.where(
+            wl_found,
+            jnp.min(jnp.where(wlv, jnp.inf, wld), axis=-1),
+            jnp.inf,
+        )
+        cand_d, cand_i = sd[:, 0], si[:, 0]
+        u_next = jnp.where(cand_d < wl_d, cand_i, wl_u)
+        found = wl_found | (cand_i != INVALID)
+        d, i, v = merge()
+    else:
+        d, i, v = merge()
+        u_next, found = _first_unvisited(i, v)
+
+    active = active & found
+    u_next = jnp.where(active, u_next, INVALID)
+    v = v | (i == u_next[:, None])
+    return d, i, v, u_next, active
+
+
+def step_ref(
+    table: jax.Array,    # (B, m, 256) f32
+    codes: jax.Array,    # (n, m) uint8
+    nbrs: jax.Array,     # (B, R) i32
+    fresh: jax.Array,    # (B, R) bool
+    wld: jax.Array,
+    wli: jax.Array,
+    wlv: jax.Array,
+    active: jax.Array,
+    *,
+    eager: bool = True,
+):
+    """Full-step oracle: XLA gather + take_along_axis ADC, then traverse_ref."""
+    safe = jnp.where(fresh, nbrs, 0)
+    gathered = codes[safe].astype(jnp.int32)                  # (B, R, m)
+    adc = jnp.sum(
+        jnp.take_along_axis(
+            table[:, None, :, :], gathered[:, :, :, None], axis=3
+        )[..., 0],
+        axis=-1,
+    )
+    cd = jnp.where(fresh, adc, jnp.inf)
+    ci = jnp.where(fresh, nbrs, INVALID)
+    return traverse_ref(cd, ci, wld, wli, wlv, active, eager=eager)

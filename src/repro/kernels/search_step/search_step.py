@@ -1,0 +1,318 @@
+"""Pallas TPU megakernel: one fused Algorithm-2 traversal iteration (§4.5-§4.8).
+
+The paper wins its throughput by fusing the per-iteration stages so candidate
+lists never leave fast memory; CAGRA (arXiv:2308.15136) keeps the whole
+traversal step in shared memory for the same reason. Our staged kernel path
+is the opposite: four separate `pallas_call`s (ADC, sort, merge, re-rank glue)
+with full HBM round-trips of the (B, R) candidate tile between them. This
+kernel executes the *whole iteration body* per grid program, entirely in VMEM:
+
+    ADC distance      one-hot x table MXU contraction, with the candidate
+                      code rows gathered *inside* the kernel from the
+                      VMEM-resident codes block (no (B, R, m) HBM temporary)
+    sort              full bitonic network over the (R,) candidate tile
+    selection         §4.6 eager (pre-merge best-of-two) or lazy (post-merge
+                      first-unvisited) candidate selection
+    merge             bitonic merge phase into the (t,) worklist, visited
+                      marking included
+
+so per hop the candidate tile touches HBM exactly once (the kernel input);
+the sorted tile, the ADC distances and the pre-merge worklist never
+materialise. Grid: one program per query -- the paper's "one thread block
+per query" -- so the ADC accumulation is the *identical op sequence* to the
+standalone pq_adc kernel and fused results stay bit-identical to staged.
+
+The compute helpers are shared with the standalone kernels
+(`pq_adc.onehot_adc_accumulate`, `bitonic.bitonic_stages`): the megakernel
+changes the schedule, not the math.
+
+VMEM sizing: the codes block (n, m) u8 rides along each program. On real
+hardware that bounds n to the VMEM budget -- which is exactly the sharded
+deployment's shape (codes row-sharded over `model`, n_loc per shard); the
+mesh path therefore uses `_local_adc_kernel` (same gather + contraction on
+the shard's own rows, ownership-masked) + psum, followed by the traverse-only
+kernel on the psum-reconstructed distances.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.bitonic.bitonic import bitonic_stages
+from repro.kernels.common import next_pow2
+from repro.kernels.pq_adc.pq_adc import MC, onehot_adc_accumulate
+
+INVALID = 2**31 - 1  # plain int: jnp scalars would be captured consts in kernels
+
+
+def _traverse_math(wld, wli, wlv, cd, ci, act, *, eager: bool, t: int):
+    """Sort + select + merge on (Q, .) jnp values (any Pallas kernel body).
+
+    wld/wli/wlv: (Q, t) worklist; cd/ci: (Q, R) unsorted candidates padded
+    with (+inf, INVALID); act: (Q, 1) >0 for still-active queries.
+    Returns (wld', wli', wlv' (Q, t), u_next (Q,), active' (Q,)).
+    """
+    R = cd.shape[1]
+    Rp = next_pow2(R)
+    if Rp != R:
+        cd = jnp.pad(cd, ((0, 0), (0, Rp - R)), constant_values=jnp.inf)
+        ci = jnp.pad(ci, ((0, 0), (0, Rp - R)), constant_values=2**31 - 1)
+
+    # §4.7 sort: full bitonic network over the candidate tile (VMEM only).
+    sd, si, _ = bitonic_stages(cd, ci, jnp.zeros_like(ci), Rp, full_sort=True)
+
+    def merge(vis_i32):
+        # §4.8 merge: worklist ascending ++ reversed candidates is bitonic,
+        # so only the final merge phase runs (same trick as merge_pallas).
+        P = next_pow2(t + Rp)
+        pad = P - t - Rp
+        pd = jnp.pad(sd, ((0, 0), (0, pad)), constant_values=jnp.inf)
+        pi = jnp.pad(si, ((0, 0), (0, pad)), constant_values=2**31 - 1)
+        pv = jnp.zeros_like(pi)                     # fresh entries unvisited
+        md = jnp.concatenate([wld, pd[:, ::-1]], axis=-1)
+        mi = jnp.concatenate([wli, pi[:, ::-1]], axis=-1)
+        mv = jnp.concatenate([vis_i32, pv[:, ::-1]], axis=-1)
+        d, i, v = bitonic_stages(md, mi, mv, P, full_sort=False)
+        # INVALID slots are never expandable: force them visited so bitonic
+        # tie-shuffling of (inf, INVALID) pads can't leak an unvisited pad
+        # into the kept prefix (the stable lax.sort reference never does).
+        v = jnp.where(i[:, :t] == INVALID, 1, v[:, :t])
+        return d[:, :t], i[:, :t], v
+
+    def first_unvisited(ids, vis_b):
+        unvis = ~vis_b
+        found = jnp.any(unvis, axis=-1)             # (Q,)
+        pos = jnp.argmax(unvis, axis=-1)            # first True (0 if none)
+        u = jnp.take_along_axis(ids, pos[:, None], axis=-1)[:, 0]
+        return jnp.where(found, u, INVALID), found
+
+    wlv_b = wlv > 0
+    if eager:
+        # §4.6 eager selection: best of {first unvisited of the *pre-merge*
+        # worklist, nearest fresh candidate} -- computable before the merge.
+        wl_u, wl_found = first_unvisited(wli, wlv_b)
+        wl_d = jnp.where(
+            wl_found,
+            jnp.min(jnp.where(wlv_b, jnp.inf, wld), axis=-1),
+            jnp.inf,
+        )
+        cand_d, cand_i = sd[:, 0], si[:, 0]
+        u_next = jnp.where(cand_d < wl_d, cand_i, wl_u)
+        found = wl_found | (cand_i != INVALID)
+        d, i, v = merge(wlv)
+    else:
+        d, i, v = merge(wlv)
+        u_next, found = first_unvisited(i, v > 0)
+
+    active = (act[:, 0] > 0) & found
+    u_next = jnp.where(active, u_next, INVALID)
+    v = jnp.where(i == u_next[:, None], 1, v)       # mark_visited, fused
+    return d, i, v, u_next, active
+
+
+def _fused_step_kernel(
+    table_ref, codes_ref, nbr_ref, fresh_ref, wld_ref, wli_ref, wlv_ref,
+    act_ref, owd_ref, owi_ref, owv_ref, un_ref, oact_ref,
+    *, eager: bool, t: int,
+):
+    # table (1, m, 256) f32 | codes (n, m) u8 | nbr/fresh (1, R) | wl* (1, t)
+    nbrs = nbr_ref[0, :]
+    fresh = fresh_ref[0, :] > 0
+    # §4.5 ADC with the code gather *inside* the kernel: the codes block is
+    # already VMEM-resident, so the (R, m) rows never exist in HBM.
+    safe = jnp.where(fresh, nbrs, 0)
+    cod = jnp.take(codes_ref[...], safe, axis=0).astype(jnp.int32)   # (R, m)
+    acc = onehot_adc_accumulate(table_ref[0], cod)                   # (R,)
+    cd = jnp.where(fresh, acc, jnp.inf)[None, :]
+    ci = jnp.where(fresh, nbrs, 2**31 - 1)[None, :]
+    d, i, v, u, a = _traverse_math(
+        wld_ref[...], wli_ref[...], wlv_ref[...], cd, ci, act_ref[...],
+        eager=eager, t=t,
+    )
+    owd_ref[...] = d
+    owi_ref[...] = i
+    owv_ref[...] = v
+    un_ref[0, 0] = u[0]
+    oact_ref[0, 0] = a[0].astype(jnp.int32)
+
+
+def _traverse_kernel(
+    cd_ref, ci_ref, wld_ref, wli_ref, wlv_ref, act_ref,
+    owd_ref, owi_ref, owv_ref, un_ref, oact_ref,
+    *, eager: bool, t: int,
+):
+    # Traverse-only variant: distances arrive precomputed (e.g. the sharded
+    # owner-ADC + psum path); QROWS queries per program like the bitonic
+    # kernels -- the row grouping changes no values.
+    d, i, v, u, a = _traverse_math(
+        wld_ref[...], wli_ref[...], wlv_ref[...], cd_ref[...], ci_ref[...],
+        act_ref[...], eager=eager, t=t,
+    )
+    owd_ref[...] = d
+    owi_ref[...] = i
+    owv_ref[...] = v
+    un_ref[...] = u[:, None]
+    oact_ref[...] = a[:, None].astype(jnp.int32)
+
+
+def _local_adc_kernel(table_ref, codes_ref, rel_ref, own_ref, out_ref):
+    # Owner-shard fused gather+ADC: codes (n_loc, m) u8 VMEM block, rel (1, R)
+    # pre-relativised ids, own (1, R) ownership mask. Output 0 where not
+    # owned -- the psum over `model` reconstructs the full row (0 is exact).
+    own = own_ref[0, :] > 0
+    safe = jnp.where(own, rel_ref[0, :], 0)
+    cod = jnp.take(codes_ref[...], safe, axis=0).astype(jnp.int32)
+    acc = onehot_adc_accumulate(table_ref[0], cod)
+    out_ref[0, :] = jnp.where(own, acc, 0.0)
+
+
+def _pad_m(table, codes):
+    """Pad the subspace axis to a multiple of MC (zero rows are neutral)."""
+    m = table.shape[1]
+    pad = (-m) % MC
+    if pad:
+        table = jnp.pad(table, ((0, 0), (0, pad), (0, 0)))
+        codes = jnp.pad(codes, ((0, 0), (0, pad)))
+    return table, codes
+
+
+QROWS = 8  # queries per program in the traverse-only kernel
+
+
+@functools.partial(jax.jit, static_argnames=("eager", "interpret"))
+def fused_step_pallas(
+    table: jax.Array,    # (B, m, 256) f32
+    codes: jax.Array,    # (n, m) uint8 -- full (or per-shard) codes block
+    nbrs: jax.Array,     # (B, R) i32 candidate ids (post bloom)
+    fresh: jax.Array,    # (B, R) bool
+    wld: jax.Array,      # (B, t) f32
+    wli: jax.Array,      # (B, t) i32
+    wlv: jax.Array,      # (B, t) bool
+    active: jax.Array,   # (B,) bool
+    *,
+    eager: bool = True,
+    interpret: bool = True,
+):
+    B, t = wld.shape
+    R = nbrs.shape[1]
+    n, _ = codes.shape
+    table, codes = _pad_m(table.astype(jnp.float32), codes)
+    m = table.shape[1]
+    out = pl.pallas_call(
+        functools.partial(_fused_step_kernel, eager=eager, t=t),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, m, 256), lambda b: (b, 0, 0)),
+            pl.BlockSpec((n, m), lambda b: (0, 0)),   # VMEM-resident codes
+            pl.BlockSpec((1, R), lambda b: (b, 0)),
+            pl.BlockSpec((1, R), lambda b: (b, 0)),
+            pl.BlockSpec((1, t), lambda b: (b, 0)),
+            pl.BlockSpec((1, t), lambda b: (b, 0)),
+            pl.BlockSpec((1, t), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, t), lambda b: (b, 0)),
+            pl.BlockSpec((1, t), lambda b: (b, 0)),
+            pl.BlockSpec((1, t), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, t), jnp.float32),
+            jax.ShapeDtypeStruct((B, t), jnp.int32),
+            jax.ShapeDtypeStruct((B, t), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        table,
+        codes,
+        nbrs.astype(jnp.int32),
+        fresh.astype(jnp.int32),
+        wld.astype(jnp.float32),
+        wli.astype(jnp.int32),
+        wlv.astype(jnp.int32),
+        active.astype(jnp.int32)[:, None],
+    )
+    d, i, v, u, a = out
+    return d, i, v.astype(jnp.bool_), u[:, 0], a[:, 0].astype(jnp.bool_)
+
+
+@functools.partial(jax.jit, static_argnames=("eager", "interpret"))
+def fused_traverse_pallas(
+    cand_dists: jax.Array,   # (B, R) f32, +inf on masked lanes
+    cand_ids: jax.Array,     # (B, R) i32, INVALID on masked lanes
+    wld: jax.Array,
+    wli: jax.Array,
+    wlv: jax.Array,
+    active: jax.Array,
+    *,
+    eager: bool = True,
+    interpret: bool = True,
+):
+    B, t = wld.shape
+    R = cand_dists.shape[1]
+    pad_b = (-B) % QROWS
+    pads = lambda x, cv: jnp.pad(x, ((0, pad_b), (0, 0)), constant_values=cv)
+    cd = pads(cand_dists.astype(jnp.float32), jnp.inf)
+    ci = pads(cand_ids.astype(jnp.int32), 2**31 - 1)
+    d1 = pads(wld.astype(jnp.float32), jnp.inf)
+    i1 = pads(wli.astype(jnp.int32), 2**31 - 1)
+    v1 = pads(wlv.astype(jnp.int32), 1)
+    act = pads(active.astype(jnp.int32)[:, None], 0)
+    grid = ((B + pad_b) // QROWS,)
+    spec_r = pl.BlockSpec((QROWS, R), lambda b: (b, 0))
+    spec_t = pl.BlockSpec((QROWS, t), lambda b: (b, 0))
+    spec_1 = pl.BlockSpec((QROWS, 1), lambda b: (b, 0))
+    out = pl.pallas_call(
+        functools.partial(_traverse_kernel, eager=eager, t=t),
+        grid=grid,
+        in_specs=[spec_r, spec_r, spec_t, spec_t, spec_t, spec_1],
+        out_specs=[spec_t, spec_t, spec_t, spec_1, spec_1],
+        out_shape=[
+            jax.ShapeDtypeStruct((B + pad_b, t), jnp.float32),
+            jax.ShapeDtypeStruct((B + pad_b, t), jnp.int32),
+            jax.ShapeDtypeStruct((B + pad_b, t), jnp.int32),
+            jax.ShapeDtypeStruct((B + pad_b, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B + pad_b, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cd, ci, d1, i1, v1, act)
+    d, i, v, u, a = out
+    return (
+        d[:B], i[:B], v[:B].astype(jnp.bool_),
+        u[:B, 0], a[:B, 0].astype(jnp.bool_),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def local_adc_pallas(
+    table: jax.Array,        # (B, m, 256) f32
+    codes_local: jax.Array,  # (n_loc, m) uint8
+    rel: jax.Array,          # (B, R) i32 shard-relative ids
+    own: jax.Array,          # (B, R) bool ownership mask
+    *,
+    interpret: bool = True,
+):
+    B, R = rel.shape
+    n_loc = codes_local.shape[0]
+    table, codes_local = _pad_m(table.astype(jnp.float32), codes_local)
+    m = table.shape[1]
+    return pl.pallas_call(
+        _local_adc_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, m, 256), lambda b: (b, 0, 0)),
+            pl.BlockSpec((n_loc, m), lambda b: (0, 0)),
+            pl.BlockSpec((1, R), lambda b: (b, 0)),
+            pl.BlockSpec((1, R), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, R), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, R), jnp.float32),
+        interpret=interpret,
+    )(table, codes_local, rel.astype(jnp.int32), own.astype(jnp.int32))

@@ -31,7 +31,11 @@ the pipeline stays resident on the GPU across query batches):
     power-of-two buckets (`bucket_size`), and compiled executables are cached
     per `(bucket, k, rerank, SearchConfig)`; arbitrary batch sizes hit the
     cache instead of recompiling. `trace_counts` exposes the per-key trace
-    count so tests can assert "compiled exactly once".
+    count so tests can assert "compiled exactly once". `SearchConfig`
+    carries the `kernel_mode` ("reference" | "staged" | "fused" -- the fused
+    search_step megakernel compiled *inside* the bucketed, donated jit), so
+    each mode gets its own bucket-padded executable; `dispatch`/`search`
+    accept `kernel_mode=` as sugar for replacing it on the cfg.
   * **Async dispatch.** `dispatch()` returns a `SearchHandle` without
     blocking; `finish()` blocks on *both* ids and dists and reports
     steady-state wall time separated from compile time (`SearchStats`).
@@ -221,12 +225,14 @@ class SearchExecutor:
                     if variant == "base" or self._data_dev is None:
                         ids, dists = rr.rerank(
                             queries, res.history_ids, k,
-                            data_np=self._data_np, use_kernels=cfg.use_kernels,
+                            data_np=self._data_np,
+                            use_kernels=cfg.uses_kernels(),
                         )
                     else:
                         ids, dists = rr.rerank(
                             queries, res.history_ids, k,
-                            data=self._data_dev, use_kernels=cfg.use_kernels,
+                            data=self._data_dev,
+                            use_kernels=cfg.uses_kernels(),
                         )
                 else:
                     ids = res.worklist.ids[:, :k]
@@ -286,17 +292,29 @@ class SearchExecutor:
         t: int = 64,
         cfg: SearchConfig | None = None,
         rerank: bool = True,
+        kernel_mode: str | None = None,
     ) -> SearchHandle:
         """Pad, compile-or-hit-cache, and asynchronously launch one batch.
 
         Returns immediately after dispatch (JAX async dispatch): the arrays in
         the handle may still be in flight. Pair with `finish()`.
+
+        `kernel_mode` ("reference" | "staged" | "fused") overrides
+        `cfg.kernel_mode`; it is part of the compile-cache key, so each mode
+        compiles (once) to its own bucket-padded executable.
         """
         q = np.asarray(queries, np.float32)
         if q.ndim != 2:
             raise ValueError(f"queries must be (B, d), got shape {q.shape}")
         B, d = q.shape
         cfg = cfg or SearchConfig(t=max(t, k))
+        if kernel_mode is not None:
+            if kernel_mode not in searchlib.KERNEL_MODES:
+                raise ValueError(
+                    f"unknown kernel_mode {kernel_mode!r}, expected one of "
+                    f"{searchlib.KERNEL_MODES}"
+                )
+            cfg = dataclasses.replace(cfg, kernel_mode=kernel_mode)
         bucket = self._bucket_for(B)
         compiled, compile_s = self._compiled(bucket, d, k, rerank, cfg)
         q_dev = self._device_queries(pad_batch(q, bucket))
@@ -340,7 +358,10 @@ class SearchExecutor:
         cfg: SearchConfig | None = None,
         rerank: bool = True,
         return_stats: bool = False,
+        kernel_mode: str | None = None,
     ) -> tuple[Array, Array] | tuple[Array, Array, SearchStats]:
         """Synchronous batched k-NN search: dispatch + finish."""
-        handle = self.dispatch(queries, k, t=t, cfg=cfg, rerank=rerank)
+        handle = self.dispatch(
+            queries, k, t=t, cfg=cfg, rerank=rerank, kernel_mode=kernel_mode
+        )
         return self.finish(handle, return_stats=return_stats)

@@ -86,12 +86,17 @@ class ServePipeline:
         cfg: SearchConfig | None = None,
         rerank: bool = True,
         max_batch: int = 128,
+        kernel_mode: str | None = None,
     ) -> None:
         if max_batch <= 0:
             raise ValueError("max_batch must be positive")
         self._ex = executor
         self._k = k
         self._cfg = cfg or SearchConfig(t=max(t, k))
+        if kernel_mode is not None:
+            # Baked into the pipeline's cfg so every micro-batch hits the
+            # same (bucket, cfg) executable in the executor's compile cache.
+            self._cfg = dataclasses.replace(self._cfg, kernel_mode=kernel_mode)
         self._rerank = rerank
         self._max_batch = max_batch
         # queue rows: (query row (d,), enqueue timestamp, gt row or None)

@@ -42,7 +42,13 @@ The serving surface is inherited unchanged from `SearchExecutor`: shape
 buckets (rounded up to a multiple of the data-axis size so rows split
 evenly), per-(bucket, k, rerank, cfg) compiled-executable cache,
 `dispatch()`/`finish()` async pairing, `SearchStats`. `ServePipeline`
-therefore drives either executor without knowing which one it has.
+therefore drives either executor without knowing which one it has. That
+includes `kernel_mode`: "fused" runs the owner-shard gather+ADC inside the
+`search_step.local_adc` kernel on each shard's device-local code rows, the
+psum reconstruction crosses the mesh, and the fused traverse kernel
+(sort+select+merge in one pallas_call) consumes the reconstructed rows --
+bit-identical to the single-device modes, cached per (bucket, cfg) like
+everything else.
 
 Typical use::
 

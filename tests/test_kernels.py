@@ -1,10 +1,24 @@
-"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs ref.py oracles."""
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs ref.py oracles, plus
+the fused search_step megakernel (unit, property, and executor-level parity
+across kernel_mode x batch bucket x serving variant)."""
+import os
+import sys
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core.worklist import Worklist
+from repro.core.worklist import INVALID_ID, Worklist
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, strategies as st
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+KERNEL_MODES = ("reference", "staged", "fused")
 
 
 @pytest.mark.parametrize("B,R,m", [(1, 4, 4), (3, 17, 9), (8, 64, 74), (5, 31, 16)])
@@ -84,3 +98,191 @@ def test_kernel_search_path_matches_reference_path(small_ann_index, rng):
     ids_k, _ = idx.search(queries, 10, cfg=SearchConfig(t=32, bloom_z=4096, use_kernels=True))
     ids_r, _ = idx.search(queries, 10, cfg=SearchConfig(t=32, bloom_z=4096, use_kernels=False))
     np.testing.assert_array_equal(np.asarray(ids_k), np.asarray(ids_r))
+
+
+# ------------------------------------------------- fused search_step kernel
+def _random_step_inputs(rng, B, R, t, m, n):
+    """Random iteration state; integer-valued tables keep every ADC sum
+    exactly representable in f32, so summation order cannot perturb parity
+    and the oracle comparison is bitwise."""
+    table = jnp.asarray(rng.integers(0, 1000, (B, m, 256)).astype(np.float32))
+    codes = jnp.asarray(rng.integers(0, 256, (n, m)).astype(np.uint8))
+    nbrs = jnp.asarray(rng.integers(0, n, (B, R)).astype(np.int32))
+    fresh = jnp.asarray(rng.random((B, R)) > 0.3)
+    # sorted random worklist with ids disjoint from the candidate range
+    wd = np.sort(rng.integers(0, 5000, (B, t)).astype(np.float32), axis=-1)
+    wi = rng.permutation(np.arange(n, n + t * B)).reshape(B, t).astype(np.int32)
+    order = np.lexsort((wi, wd), axis=-1)
+    wl = Worklist(
+        jnp.asarray(np.take_along_axis(wd, order, -1)),
+        jnp.asarray(np.take_along_axis(wi, order, -1)),
+        jnp.asarray(rng.random((B, t)) > 0.5),
+    )
+    active = jnp.asarray(rng.random((B,)) > 0.2)
+    return table, codes, nbrs, fresh, wl, active
+
+
+def _assert_step_matches_oracle(table, codes, nbrs, fresh, wl, active, eager):
+    from repro.kernels.search_step import ops
+
+    wl2, u, a = ops.fused_step(table, codes, wl, nbrs, fresh, active, eager=eager)
+    rd, ri, rv, ru, ra = ops.step_ref(
+        table, codes, nbrs, fresh, wl.dists, wl.ids, wl.visited, active,
+        eager=eager,
+    )
+    np.testing.assert_array_equal(np.asarray(wl2.ids), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(wl2.dists), np.asarray(rd))
+    np.testing.assert_array_equal(np.asarray(wl2.visited), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(u), np.asarray(ru))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(ra))
+
+
+@pytest.mark.parametrize("B,R,t,m,n", [
+    (1, 1, 4, 1, 16),          # degenerate single-candidate step
+    (3, 17, 24, 9, 120),       # non-pow2 R and t, odd m
+    (8, 32, 32, 8, 256),       # pow2 everywhere (the serving shape)
+    (2, 24, 33, 6, 90),        # t just past a pow2 boundary
+])
+@pytest.mark.parametrize("eager", [True, False])
+def test_search_step_matches_oracle(B, R, t, m, n, eager, rng):
+    _assert_step_matches_oracle(*_random_step_inputs(rng, B, R, t, m, n), eager)
+
+
+@pytest.mark.parametrize("B,R,t", [(1, 4, 8), (5, 31, 16), (9, 16, 64)])
+@pytest.mark.parametrize("eager", [True, False])
+def test_fused_traverse_matches_oracle(B, R, t, eager, rng):
+    from repro.kernels.search_step import ops
+
+    fresh = jnp.asarray(rng.random((B, R)) > 0.3)
+    cd = jnp.where(fresh, jnp.asarray(
+        rng.integers(0, 5000, (B, R)).astype(np.float32)), jnp.inf)
+    ci = jnp.where(fresh, jnp.asarray(
+        rng.integers(0, 10_000, (B, R)).astype(np.int32)), INVALID_ID)
+    _, _, _, _, wl, active = _random_step_inputs(rng, B, R, t, 1, 16)
+    wl2, u, a = ops.fused_traverse(wl, cd, ci, active, eager=eager)
+    rd, ri, rv, ru, ra = ops.traverse_ref(
+        cd, ci, wl.dists, wl.ids, wl.visited, active, eager=eager
+    )
+    np.testing.assert_array_equal(np.asarray(wl2.ids), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(wl2.dists), np.asarray(rd))
+    np.testing.assert_array_equal(np.asarray(wl2.visited), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(u), np.asarray(ru))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(ra))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_fused_step_property_random_worklists(seed):
+    """Property: the megakernel equals the ref.py oracle on arbitrary
+    worklist/candidate/activity states, both selection modes."""
+    prng = np.random.default_rng(seed)
+    B = int(prng.integers(1, 5))
+    R = int(prng.integers(1, 25))
+    t = int(prng.integers(4, 33))
+    m = int(prng.integers(1, 13))
+    n = int(prng.integers(16, 200))
+    eager = bool(prng.integers(0, 2))
+    _assert_step_matches_oracle(
+        *_random_step_inputs(prng, B, R, t, m, n), eager
+    )
+
+
+@pytest.mark.parametrize("variant", ["inmem", "base", "sharded", "sharded-base"])
+@pytest.mark.parametrize("batch", [5, 12])   # -> buckets 8 and 16
+def test_executor_kernel_mode_parity(small_ann_index, variant, batch, rng):
+    """Executor-level matrix: every kernel_mode returns bit-identical ids
+    and (re-ranked, exact) dists on every serving variant and bucket."""
+    from repro.core import SearchConfig
+
+    data, idx = small_ann_index
+    queries = rng.standard_normal((batch, data.shape[1])).astype(np.float32)
+    cfg = SearchConfig(t=16, bloom_z=4096)
+    out = {}
+    for mode in KERNEL_MODES:
+        ids, dists = idx.search(
+            queries, 5, cfg=cfg, variant=variant, kernel_mode=mode
+        )
+        out[mode] = (np.asarray(ids), np.asarray(dists))
+    ref_ids, ref_dists = out["reference"]
+    assert ref_ids.shape == (batch, 5)
+    for mode in ("staged", "fused"):
+        np.testing.assert_array_equal(out[mode][0], ref_ids)
+        # kernel modes re-rank through the rerank_l2 Pallas kernel, whose
+        # exact-L2 accumulation order differs from the XLA reference by at
+        # most an ulp; ids above are bit-identical.
+        np.testing.assert_allclose(
+            out[mode][1], ref_dists, rtol=1e-6, atol=1e-5
+        )
+    # fused and staged share the one-hot ADC op sequence and both re-rank
+    # through the kernel: bit-identical to each other.
+    np.testing.assert_array_equal(out["fused"][1], out["staged"][1])
+    # cross-variant: the PQ cells agree bitwise with single-device inmem
+    in_ids, in_dists = idx.search(queries, 5, cfg=cfg, variant="inmem")
+    np.testing.assert_array_equal(ref_ids, np.asarray(in_ids))
+    np.testing.assert_array_equal(ref_dists, np.asarray(in_dists))
+
+
+def test_kernel_mode_compile_cache_isolation(small_ann_index, rng):
+    """Each kernel_mode compiles its own bucketed executable exactly once."""
+    from repro.core import SearchConfig
+    from repro.runtime import SearchExecutor
+
+    data, idx = small_ann_index
+    ex = SearchExecutor.from_index(idx, variant="inmem")
+    queries = rng.standard_normal((4, data.shape[1])).astype(np.float32)
+    cfg = SearchConfig(t=16, bloom_z=4096)
+    for mode in KERNEL_MODES:
+        for _ in range(2):
+            ex.search(queries, 5, cfg=cfg, kernel_mode=mode)
+    assert ex.cache_size == len(KERNEL_MODES)
+    assert ex.n_traces == len(KERNEL_MODES)
+    with pytest.raises(ValueError, match="kernel_mode"):
+        ex.search(queries, 5, cfg=cfg, kernel_mode="warp")
+
+
+def test_hbm_accounting_fused_strictly_fewer():
+    """Acceptance: the fused step issues strictly fewer HBM-visible
+    intermediates -- one candidate-tile round-trip per hop, zero bytes of
+    inter-stage temporaries."""
+    from repro.kernels.search_step import ops
+
+    assert ops.hbm_candidate_roundtrips_per_hop("fused") == 1
+    assert (
+        ops.hbm_candidate_roundtrips_per_hop("fused")
+        < ops.hbm_candidate_roundtrips_per_hop("staged")
+    )
+    B, R, m, t = 64, 32, 16, 64
+    fused = ops.hbm_intermediate_bytes_per_hop("fused", B, R, m, t)
+    staged = ops.hbm_intermediate_bytes_per_hop("staged", B, R, m, t)
+    assert fused == 0 and fused < staged
+    # the staged bill is dominated by the (B, R, m) gathered-codes temporary
+    assert staged >= B * R * m * 4
+
+
+def test_bench_kernel_row_json_schema():
+    """bench_kernels' executor-lane rows: schema + fused < staged traffic."""
+    import json
+
+    if REPO not in sys.path:
+        sys.path.insert(0, REPO)   # benchmarks/ lives next to src/, not in it
+    from benchmarks.bench_kernels import KERNEL_ROW_SCHEMA, kernel_row
+
+    rows = {
+        mode: kernel_row(
+            f"exec_inmem_{mode}_b16", mode, "inmem", 12, 16,
+            qps=100.0, us_per_query=10.0, per_hop_us=1.0, n_iters=32,
+            R=16, m=8, compile_s=1.0, t=16,
+        )
+        for mode in KERNEL_MODES
+    }
+    for row in rows.values():
+        assert set(row) == set(KERNEL_ROW_SCHEMA)
+        assert row == json.loads(json.dumps(row))
+    assert (
+        rows["fused"]["hbm_candidate_roundtrips_per_hop"]
+        < rows["staged"]["hbm_candidate_roundtrips_per_hop"]
+    )
+    assert (
+        rows["fused"]["hbm_intermediate_bytes_per_hop"]
+        < rows["staged"]["hbm_intermediate_bytes_per_hop"]
+    )
