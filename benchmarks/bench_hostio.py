@@ -1,0 +1,156 @@
+"""Host-I/O subsystem sweep: workers x hot-cache size x prefetch on/off.
+
+The paper's throughput story for BANG Base hinges on the CPU side: how fast
+the host can serve adjacency rows, and how much of that service time hides
+behind device compute (§4, §4.6). This bench sweeps the
+`repro.runtime.hostio` knobs on the "base" serving workload and emits one
+machine-readable `ROWJSON,<HOSTIO_ROW_SCHEMA>` record per cell:
+
+  * steady-state QPS through `ServePipeline` (compile time excluded, same
+    protocol as the other serving benches);
+  * the host-link byte split per hop, including `host_bytes_saved_per_hop`
+    -- the traffic the device-resident hot cache absorbed (measured hit
+    rate x the rows-back leg);
+  * the measured `overlap_fraction` -- the share of host gather time hidden
+    behind the device merge by the prefetched frontier exchange (> 0
+    whenever prefetch is on and any gather was issued);
+  * service contention counters (max queue depth, mean request latency).
+
+A final cell measures the `ServePipeline` cross-batch query-result LRU on a
+repeat-heavy trace (every row a cache hit on the second drain).
+
+CPU-host numbers are relative, as everywhere in benchmarks/: the measured
+object is the *shape* -- cache hit rate vs bytes saved, overlap fraction vs
+prefetch, QPS vs worker count -- not absolute throughput.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.core import SearchConfig, brute_force_knn, recall_at_k
+from repro.runtime import ServePipeline, SearchExecutor
+from repro.runtime.hostio import HostIOConfig
+
+from .common import bench_dataset
+
+REPEATS = 3
+HOSTIO_T = 48
+HOSTIO_BATCH = 64
+WORKER_SWEEP = (1, 4)
+CACHE_SWEEP = (0, 512)
+PREFETCH_SWEEP = (False, True)
+
+# The JSON schema of one hostio-sweep row (tests/test_hostio.py pins it).
+HOSTIO_ROW_SCHEMA = frozenset({
+    "name", "us_per_query", "qps", "recall", "variant",
+    "workers", "hot_cache_rows", "prefetch",
+    "hot_cache_hit_rate", "host_link_bytes_per_hop",
+    "host_bytes_saved_per_hop", "overlap_fraction",
+    "prefetch_hits", "prefetch_misses", "max_queue_depth",
+    "mean_gather_latency_ms", "compile_s",
+})
+
+
+def hostio_row(
+    name: str, ex, recall: float, qps: float, us_per_query: float,
+    compile_s: float, batch: int = HOSTIO_BATCH,
+) -> dict:
+    """One hostio-sweep record conforming to HOSTIO_ROW_SCHEMA."""
+    x = ex.exchange_bytes_per_hop(batch)
+    s = ex.hostio_runtime.stats()
+    cfg = ex.hostio_runtime.config
+    return {
+        "name": name,
+        "us_per_query": round(us_per_query, 1),
+        "qps": round(qps, 1),
+        "recall": round(recall, 4),
+        "variant": ex.variant,
+        "workers": cfg.workers,
+        "hot_cache_rows": x["hot_cache_rows"],
+        "prefetch": cfg.prefetch,
+        "hot_cache_hit_rate": round(x["hot_cache_hit_rate"], 4),
+        "host_link_bytes_per_hop": x["host_link_bytes"],
+        "host_bytes_saved_per_hop": x["host_bytes_saved_per_hop"],
+        "overlap_fraction": round(s["overlap_fraction"], 4),
+        "prefetch_hits": s["prefetch_hits"],
+        "prefetch_misses": s["prefetch_misses"],
+        "max_queue_depth": s["max_queue_depth"],
+        "mean_gather_latency_ms": round(s["mean_latency_ms"], 3),
+        "compile_s": round(compile_s, 2),
+    }
+
+
+def _row_derived(row: dict) -> str:
+    return (
+        f"qps={row['qps']:.0f},workers={row['workers']},"
+        f"cache={row['hot_cache_rows']},prefetch={int(row['prefetch'])},"
+        f"hit_rate={row['hot_cache_hit_rate']:.3f},"
+        f"saved_B={row['host_bytes_saved_per_hop']},"
+        f"overlap={row['overlap_fraction']:.3f},"
+        f"qdepth={row['max_queue_depth']},compile_s={row['compile_s']:.2f}"
+    )
+
+
+def run(report) -> None:
+    data, queries, idx = bench_dataset()
+    k = 10
+    q = np.asarray(queries[:HOSTIO_BATCH], np.float32)
+    gt = brute_force_knn(data, q, k)
+    cfg = SearchConfig(t=HOSTIO_T, bloom_z=16384)
+
+    for workers in WORKER_SWEEP:
+        for cache_rows in CACHE_SWEEP:
+            for prefetch in PREFETCH_SWEEP:
+                hio = HostIOConfig(
+                    workers=workers, hot_cache_rows=cache_rows,
+                    prefetch=prefetch,
+                )
+                ex = SearchExecutor.from_index(idx, variant="base", hostio=hio)
+                pipe = ServePipeline(ex, k=k, cfg=cfg, max_batch=HOSTIO_BATCH)
+                try:
+                    pipe.submit(q)
+                    ids, _, warm = pipe.drain()
+                    r = recall_at_k(ids, np.asarray(gt))
+                    best_qps, best_wall = 0.0, float("inf")
+                    for _ in range(REPEATS):
+                        pipe.submit(q)
+                        _, _, stats = pipe.drain()
+                        if stats.compile_s != 0.0:
+                            raise RuntimeError("steady-state drain recompiled")
+                        best_qps = max(best_qps, stats.qps)
+                        best_wall = min(best_wall, stats.wall_s)
+                finally:
+                    pipe.close()
+                name = (
+                    f"hostio_base_w{workers}_c{cache_rows}"
+                    f"_p{int(prefetch)}"
+                )
+                row = hostio_row(
+                    name, ex, r, best_qps,
+                    best_wall / len(q) * 1e6, warm.compile_s,
+                )
+                print(f"ROWJSON,{json.dumps(row)}", flush=True)
+                report(name, row["us_per_query"], _row_derived(row))
+
+    _result_cache_cell(report, idx, q, gt, cfg, k)
+
+
+def _result_cache_cell(report, idx, q, gt, cfg, k) -> None:
+    """Repeat-heavy trace through the ServePipeline query-result LRU."""
+    ex = idx.executor("inmem")
+    pipe = ServePipeline(
+        ex, k=k, cfg=cfg, max_batch=HOSTIO_BATCH,
+        result_cache_size=4 * HOSTIO_BATCH,
+    )
+    pipe.submit(q)
+    pipe.drain()                       # cold: fills the cache (+ compile)
+    pipe.submit(q)
+    _, _, warm = pipe.drain()          # every row a hit
+    report(
+        "hostio_result_cache_repeat",
+        warm.wall_s / len(q) * 1e6,
+        f"qps={warm.qps:.0f},hits={warm.result_cache_hits},"
+        f"hit_rate={warm.result_cache_hit_rate:.3f},batches={warm.batches}",
+    )

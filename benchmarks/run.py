@@ -1,7 +1,15 @@
 """Benchmark driver: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call = per-query wall
-time where meaningful, 0.0 for pure-quality measurements).
+time where meaningful, 0.0 for pure-quality measurements). Suites that
+measure through the serving runtime additionally flush machine-readable
+``ROWJSON,<record>`` lines as each cell completes -- `KERNEL_ROW_SCHEMA`
+(kernels + qps_recall kernel-mode lane), `SHARDED_ROW_SCHEMA` (qps_recall
+device sweep) and `HOSTIO_ROW_SCHEMA` (hostio lane); the CSV `derived`
+column carries the same numbers flattened for spreadsheets.
+
+Run everything: ``python -m benchmarks.run``; one suite by name:
+``python -m benchmarks.run hostio``.
 """
 from __future__ import annotations
 
@@ -13,6 +21,7 @@ def main() -> None:
     from . import (
         bench_ablations,
         bench_compression,
+        bench_hostio,
         bench_iterations,
         bench_kernels,
         bench_qps_recall,
@@ -20,14 +29,19 @@ def main() -> None:
     )
 
     suites = [
-        ("qps_recall", bench_qps_recall),
+        ("qps_recall", bench_qps_recall),   # incl. the kernel-mode serving lane
         ("variants", bench_variants),
         ("compression", bench_compression),
         ("iterations", bench_iterations),
-        ("kernels", bench_kernels),
+        ("kernels", bench_kernels),         # incl. the in-executor kernel lane
+        ("hostio", bench_hostio),           # host-I/O subsystem sweep
         ("ablations", bench_ablations),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
+    if only and only not in {name for name, _ in suites}:
+        print(f"unknown suite {only!r}; have: "
+              f"{', '.join(name for name, _ in suites)}", file=sys.stderr)
+        sys.exit(2)
 
     print("name,us_per_call,derived")
     rows = []

@@ -15,14 +15,26 @@ CPU-side graph service; `--variant inmem`/`exact` are the §5 variants.
 RAM, row-partitioned behind one callback per model shard (the server prints
 the per-hop host-link vs collective byte split). `--kernel-mode fused` swaps
 the traversal step for the search_step Pallas megakernel (one pallas_call per
-hop, candidates never leave VMEM); `staged` is the per-stage kernel path. On
-a CPU host `--devices N` forces N fake devices (set before any other use of
-jax in the process, which this entrypoint guarantees by setting XLA_FLAGS
-first). See `--help` for the variant x placement and kernel-mode matrices.
+hop, candidates never leave VMEM); `staged` is the per-stage kernel path.
+
+The host-graph variants additionally take the async host-I/O subsystem
+knobs: `--host-workers N` serves adjacency through a multi-worker neighbour
+service (N gather threads per graph partition), `--hot-cache-rows H` pins
+the H highest-in-degree adjacency rows in device memory (hits skip the host
+link; the server prints the measured hit rate and bytes saved), and
+`--prefetch` double-buffers the frontier exchange (hop k+1's expected gather
+issued while the device merges hop k; the server prints the measured overlap
+fraction). `--result-cache N` enables the ServePipeline cross-batch
+query-result LRU (any variant). On a CPU host `--devices N` forces N fake
+devices (set before any other use of jax in the process, which this
+entrypoint guarantees by setting XLA_FLAGS first). See `--help` for the
+variant x placement, kernel-mode and host-I/O matrices.
 
     PYTHONPATH=src python examples/serve_ann.py --batches 5 --batch-size 128
     PYTHONPATH=src python examples/serve_ann.py --variant sharded --devices 4
     PYTHONPATH=src python examples/serve_ann.py --variant sharded-base --devices 4
+    PYTHONPATH=src python examples/serve_ann.py --variant base \
+        --host-workers 4 --hot-cache-rows 512 --prefetch
 
 Sample output (all batches are enqueued before the drain starts, so per-row
 latency includes queue wait and -- for the first batch -- the one-off compile;
@@ -59,6 +71,23 @@ kernel-mode matrix (traversal-step implementation, --kernel-mode):
                        whole hop in one          ADC kernel + psum, fused
                        pallas_call, in-kernel    traverse kernel (exact L2
                        code gather               stays outside either way)
+
+host-I/O matrix (async host subsystem, base / sharded-base only; every
+combination is bit-exact vs the inline-callback path in every kernel mode):
+
+    knob               effect
+    -----------------  ------------------------------------------------
+    --host-workers N   multi-worker neighbour service: N gather threads
+                       per host graph partition, queued batched gathers
+    --hot-cache-rows H top-in-degree adjacency rows pinned on device;
+                       hits never cross the host link (hit rate + bytes
+                       saved reported)
+    --prefetch         double-buffered frontier exchange: hop k+1's §4.6
+                       eager-candidate gather overlaps hop k's merge
+                       (measured overlap fraction reported)
+    --result-cache N   ServePipeline cross-batch query-result LRU (any
+                       variant): repeat queries served bit-identically
+                       without touching the executor
 """
 
 
@@ -86,6 +115,19 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices for the sharded variants "
                          "(0 = use whatever devices exist)")
+    ap.add_argument("--host-workers", type=int, default=0,
+                    help="serve the host graph through the async host-I/O "
+                         "subsystem with N gather threads per partition "
+                         "(base/sharded-base only; 0 = inline callbacks)")
+    ap.add_argument("--hot-cache-rows", type=int, default=0,
+                    help="pin the H highest-in-degree adjacency rows in "
+                         "device memory (requires --host-workers >= 1)")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="double-buffer the frontier exchange (requires "
+                         "--host-workers >= 1)")
+    ap.add_argument("--result-cache", type=int, default=0,
+                    help="ServePipeline cross-batch query-result LRU size "
+                         "(0 = off)")
     args = ap.parse_args()
 
     if args.devices > 0:
@@ -107,7 +149,25 @@ def main() -> None:
     index = BangIndex.build(data, m=16, R=24, L_build=48)
     cfg = SearchConfig(t=args.t, bloom_z=16384)
 
-    executor = index.executor(args.variant)   # sharded -> default all-device mesh
+    hostio = None
+    if args.host_workers > 0:
+        from repro.runtime.hostio import HostIOConfig
+
+        if not args.variant.endswith("base"):
+            raise SystemExit(
+                "--host-workers applies to the host-graph variants only "
+                "(base, sharded-base)"
+            )
+        hostio = HostIOConfig(
+            workers=args.host_workers,
+            hot_cache_rows=args.hot_cache_rows,
+            prefetch=args.prefetch,
+        )
+    elif args.hot_cache_rows or args.prefetch:
+        raise SystemExit("--hot-cache-rows/--prefetch need --host-workers >= 1")
+
+    # sharded -> default all-device mesh
+    executor = index.executor(args.variant, hostio=hostio)
     x = executor.exchange_bytes_per_hop(args.max_batch)
     if args.variant.startswith("sharded"):
         print(
@@ -140,9 +200,15 @@ def main() -> None:
                 f"[serve] kernel-mode {args.kernel_mode}: candidate tile "
                 f"crosses HBM {trips}x per hop"
             )
+    if hostio is not None:
+        print(
+            f"[serve] host-I/O subsystem: {hostio.workers} worker(s)/partition"
+            f", hot cache {hostio.hot_cache_rows} rows, "
+            f"prefetch={'on' if hostio.prefetch else 'off'}"
+        )
     pipe = ServePipeline(
         executor, k=args.k, cfg=cfg, max_batch=args.max_batch,
-        kernel_mode=args.kernel_mode,
+        kernel_mode=args.kernel_mode, result_cache_size=args.result_cache,
     )
     for b in range(args.batches):
         queries = uniform_queries(data, args.batch_size, seed=100 + b)
@@ -170,6 +236,24 @@ def main() -> None:
         f"mean recall@{args.k}={recall} (variant={args.variant}, "
         f"kernel-mode={args.kernel_mode})"
     )
+    if args.result_cache:
+        print(
+            f"[serve] result cache: {stats.result_cache_hits} hits "
+            f"({stats.result_cache_hit_rate:.1%} of queries)"
+        )
+    if stats.hostio is not None:
+        h = stats.hostio
+        xb = executor.exchange_bytes_per_hop(args.max_batch)
+        print(
+            f"[serve] host-I/O: {h['requests']} requests, "
+            f"max queue depth {h['max_queue_depth']}, "
+            f"mean gather {h['mean_latency_ms']:.2f}ms | "
+            f"hot-cache hit rate {h['cache_hit_rate']:.1%} "
+            f"(~{xb['host_bytes_saved_per_hop']} B/hop saved) | "
+            f"prefetch overlap {h['overlap_fraction']:.1%} "
+            f"({h['prefetch_hits']} hits, {h['prefetch_misses']} misses)"
+        )
+    pipe.close()
 
 
 if __name__ == "__main__":

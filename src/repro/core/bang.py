@@ -34,6 +34,25 @@ sharded case) and only frontier ids / adjacency rows cross the host link.
 "inmem"/"sharded" are BANG In-memory; "exact" is BANG Exact-distance.
 Legacy `SearchConfig(use_kernels=True)` is an alias for
 `kernel_mode="staged"`.
+
+The host-graph cells additionally take `hostio=HostIOConfig(...)` (the async
+host-I/O subsystem, `repro.runtime.hostio`) -- the paper's CPU half as a
+first-class service instead of an inline callback. Orthogonal to both axes
+above and bit-exact in every cell x kernel mode:
+
+    hostio knob \\ effect     base / sharded-base
+    -----------------------  -------------------------------------------
+    workers=N                multi-worker host gather service: N threads
+                             per graph partition drain a request queue
+                             (queue-depth/latency counters)
+    hot_cache_rows=H         top-in-degree adjacency rows pinned in device
+                             memory; hits skip the host link entirely
+                             (measured hit rate + bytes saved in
+                             exchange_bytes_per_hop)
+    prefetch=True            double-buffered frontier exchange: hop k+1's
+                             §4.6 eager candidate gather is issued while
+                             the device merges hop k (measured
+                             overlap_fraction)
 """
 from __future__ import annotations
 
@@ -109,7 +128,7 @@ class BangIndex:
         return self.codes.shape[0]
 
     # ----------------------------------------------------------------- search
-    def executor(self, variant: str = "inmem", *, mesh=None):
+    def executor(self, variant: str = "inmem", *, mesh=None, hostio=None):
         """The jit-cached executor serving this index for `variant`.
 
         Executors are created lazily and cached per variant; device state
@@ -125,25 +144,37 @@ class BangIndex:
         whole graph spread over every local device. Sharded executors are
         cached per (variant, mesh), so the two sharded variants never share
         (or alias) executor state even on the same mesh.
+
+        `hostio=HostIOConfig(...)` (host-graph variants only) serves the
+        graph through the async host-I/O subsystem — multi-worker neighbour
+        service, device-resident hot-adjacency cache, prefetched frontier
+        exchange — instead of the inline synchronous callbacks; executors
+        are cached per (variant, mesh, hostio), so differently-configured
+        services never share worker pools or compiled executables.
         """
         if variant in ("sharded", "sharded-base"):
             if mesh is None:
                 from repro.compat import make_mesh
 
                 mesh = make_mesh((1, len(jax.devices())), ("data", "model"))
-            key: Any = (variant, mesh)
         elif mesh is not None:
             raise ValueError(
                 f"mesh= only applies to the sharded variants, got {variant!r}"
             )
-        else:
-            key = variant
+        if hostio is not None and variant not in ("base", "sharded-base"):
+            raise ValueError(
+                "hostio= only applies to the host-resident-graph variants "
+                f"('base', 'sharded-base'), got {variant!r}"
+            )
+        key: Any = (variant, mesh, hostio)
         ex = self._executors.get(key)
         if ex is None:
             if variant in ("sharded", "sharded-base"):
                 from repro.runtime.sharded import ShardedSearchExecutor
 
-                ex = ShardedSearchExecutor.from_index(self, mesh, variant=variant)
+                ex = ShardedSearchExecutor.from_index(
+                    self, mesh, variant=variant, hostio=hostio
+                )
             else:
                 from repro.runtime.executor import SearchExecutor
 
@@ -159,6 +190,7 @@ class BangIndex:
                             break
                 ex = SearchExecutor.from_index(
                     self, variant=variant, adjacency_dev=shared_adj,
+                    hostio=hostio,
                 )
             self._executors[key] = ex
         return ex
@@ -175,6 +207,7 @@ class BangIndex:
         return_stats: bool = False,
         mesh=None,
         kernel_mode: str | None = None,
+        hostio=None,
     ) -> tuple[Array, Array] | tuple[Array, Array, SearchStats]:
         """Batched k-NN search. Returns (ids (B, k), dists (B, k)).
 
@@ -190,8 +223,11 @@ class BangIndex:
         equal to the single-device variants. `kernel_mode` picks the
         traversal-step implementation ("reference" | "staged" | "fused", see
         the module docstring matrix); all modes return bit-identical ids.
+        `hostio=HostIOConfig(...)` serves the host-graph variants through
+        the async host-I/O subsystem (see the hostio matrix above),
+        bit-exact vs the inline-callback path in every configuration.
         """
-        return self.executor(variant, mesh=mesh).search(
+        return self.executor(variant, mesh=mesh, hostio=hostio).search(
             queries, k, t=t, cfg=cfg, rerank=rerank,
             return_stats=return_stats, kernel_mode=kernel_mode,
         )

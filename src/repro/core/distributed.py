@@ -116,6 +116,11 @@ def host_shard_neighbor_fn(
     `partitions[s]` must be the contiguous rows [s*n_loc, (s+1)*n_loc) of the
     (padded) adjacency; results are bit-identical to `sharded_neighbor_fn`
     over the concatenated array.
+
+    This inline single-shot callback is the synchronous oracle path; the
+    serving executors can replace it with the async host-I/O subsystem
+    (`repro.runtime.hostio`: multi-worker service + device-resident hot
+    cache + prefetched exchange, same ownership math, bit-exact results).
     """
     parts = [np.ascontiguousarray(np.asarray(p, np.int32)) for p in partitions]
     n_loc, R = parts[0].shape
@@ -212,14 +217,18 @@ def sharded_bang_search_block(
     axis: str = "model",
     rerank: bool = True,
     neighbor_fn: Callable | None = None,
+    prefetch_fn: Callable | None = None,
 ) -> tuple[Array, Array, Array, Array]:
     """The per-shard body: full BANG pipeline on sharded state.
 
     The graph source is pluggable: by default adjacency rows come from the
     device-sharded `adjacency_local` (`sharded_neighbor_fn`); the sharded
     base variant instead passes `neighbor_fn=host_shard_neighbor_fn(...)`
-    (adjacency stays in host RAM, `adjacency_local=None`). PQ codes and
-    re-rank vectors are device-sharded either way.
+    (adjacency stays in host RAM, `adjacency_local=None`), or -- when the
+    hostio subsystem serves the graph -- the multi-worker
+    `repro.runtime.hostio.make_shard_exchange` pair, whose `prefetch_fn`
+    double-buffers each shard's host gather behind the device merge. PQ
+    codes and re-rank vectors are device-sharded either way.
 
     Returns (ids (B_loc, k), dists (B_loc, k), n_hops (B_loc,),
     n_iters (B_loc,)) -- all replicated over `axis` (the worklist/bloom state
@@ -243,6 +252,7 @@ def sharded_bang_search_block(
         medoid=medoid,
         n_points=codes_local.shape[0],  # local; only used for sizing hints
         cfg=cfg,
+        prefetch_fn=prefetch_fn,
     )
     if rerank:
         # Re-rank (§4.9) stays sharded: each shard scores only the expanded

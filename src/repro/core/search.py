@@ -117,10 +117,15 @@ class _State(NamedTuple):
     u: Array                # (B,) pending candidate (eagerly selected)
     active: Array           # (B,) not yet converged
     it: Array               # ()
+    tok: Array              # (1,) prefetch ticket ((0,) when prefetch is off)
 
 
 NeighborFn = Callable[[Array], Array]     # (B,) ids -> (B, R) neighbour ids
 DistanceFn = Callable[[Array, Array], Array]  # ids (B,R), valid -> dists (B,R)
+# (B,) expected next frontier -> (1,) int32 ticket ordering issue vs collect.
+# Built by repro.runtime.hostio.prefetch; when given, neighbor_fn takes
+# (u, token) and redeems the previous hop's ticket.
+PrefetchFn = Callable[[Array], Array]
 
 
 # ---------------------------------------------------------------------------
@@ -135,6 +140,15 @@ class StepFn:
     `step(wl, nbrs, fresh, active)` consumes the bloom-filtered neighbour
     tile and returns `(worklist', u_next, active')` with the §4.6 selection
     applied and the selected slot already marked visited.
+
+    `step_with_prefetch` is the **async-fetch seam** for the host-I/O
+    subsystem (`repro.runtime.hostio`): it additionally calls `prefetch_fn`
+    with the expected next frontier and returns the resulting (1,) ticket,
+    which the search loop threads into the next hop's neighbour fetch. The
+    default issues after the full step; implementations whose eager
+    selection is visible pre-merge (ReferenceStep/StagedStep) override it to
+    issue *between selection and merge*, so the host gather overlaps the
+    merge -- exactly the concurrency §4.6 exists for.
     """
 
     eager: bool = True
@@ -146,6 +160,13 @@ class StepFn:
         self, wl: Worklist, nbrs: Array, fresh: Array, active: Array
     ) -> tuple[Worklist, Array, Array]:
         raise NotImplementedError
+
+    def step_with_prefetch(
+        self, wl: Worklist, nbrs: Array, fresh: Array, active: Array,
+        prefetch_fn: "PrefetchFn",
+    ) -> tuple[Worklist, Array, Array, Array]:
+        wl, u_next, active = self.step(wl, nbrs, fresh, active)
+        return wl, u_next, active, prefetch_fn(u_next)
 
 
 class ReferenceStep(StepFn):
@@ -164,9 +185,10 @@ class ReferenceStep(StepFn):
     def _merge(self, wl: Worklist, sd: Array, si: Array) -> Worklist:
         return merge_worklist(wl, sd, si)
 
-    def step(
-        self, wl: Worklist, nbrs: Array, fresh: Array, active: Array
-    ) -> tuple[Worklist, Array, Array]:
+    def _body(
+        self, wl: Worklist, nbrs: Array, fresh: Array, active: Array,
+        prefetch_fn: "PrefetchFn | None" = None,
+    ) -> tuple[Worklist, Array, Array, Array | None]:
         # 3. PQ (or exact) distances for fresh neighbours.
         d = self.distance_fn(nbrs, fresh)
         cand_ids = jnp.where(fresh, nbrs, INVALID_ID)
@@ -177,6 +199,7 @@ class ReferenceStep(StepFn):
         # 5. Candidate selection. Eager (§4.6): best of {first unvisited in
         #    the *pre-merge* worklist, nearest fresh neighbour} -- computable
         #    before the merge. Lazy: first unvisited of the merged worklist.
+        tok = None
         if self.eager:
             wl_u, wl_found = first_unvisited(wl)
             wl_d = jnp.where(
@@ -188,6 +211,13 @@ class ReferenceStep(StepFn):
             take_cand = cand_best_d < wl_d
             u_next = jnp.where(take_cand, cand_best_i, wl_u)
             found = wl_found | (cand_best_i != INVALID_ID)
+            if prefetch_fn is not None:
+                # §4.6 realised: the expected frontier is known *before* the
+                # merge, so the host gather for hop k+1 is issued here and
+                # runs while the device merges hop k. Prediction only -- the
+                # convergence masking below may still retire a lane, and
+                # collect() inline-gathers any mismatched lane.
+                tok = prefetch_fn(u_next)
             wl = self._merge(wl, sd, si)
         else:
             wl = self._merge(wl, sd, si)
@@ -196,7 +226,21 @@ class ReferenceStep(StepFn):
         active = active & found
         u_next = jnp.where(active, u_next, INVALID_ID)
         wl = mark_visited(wl, u_next)
+        if prefetch_fn is not None and tok is None:
+            tok = prefetch_fn(u_next)        # lazy selection: post-merge issue
+        return wl, u_next, active, tok
+
+    def step(
+        self, wl: Worklist, nbrs: Array, fresh: Array, active: Array
+    ) -> tuple[Worklist, Array, Array]:
+        wl, u_next, active, _ = self._body(wl, nbrs, fresh, active)
         return wl, u_next, active
+
+    def step_with_prefetch(
+        self, wl: Worklist, nbrs: Array, fresh: Array, active: Array,
+        prefetch_fn: "PrefetchFn",
+    ) -> tuple[Worklist, Array, Array, Array]:
+        return self._body(wl, nbrs, fresh, active, prefetch_fn)
 
 
 class StagedStep(ReferenceStep):
@@ -372,6 +416,7 @@ def bang_search(
     medoid: int,
     n_points: int,
     cfg: SearchConfig,
+    prefetch_fn: PrefetchFn | None = None,
 ) -> SearchResult:
     """Run Algorithm 2 for a batch of queries. Pure function of its inputs.
 
@@ -379,6 +424,12 @@ def bang_search(
     `distance_fn` when not given explicitly); the neighbour source stays a
     separate callback because it is what the variants change (device gather,
     host callback, sharded collective).
+
+    With `prefetch_fn` (the hostio double-buffered exchange) the loop state
+    carries a (1,) prefetch ticket: each hop's `step_with_prefetch` issues
+    the next hop's expected-frontier gather and `neighbor_fn(u, token)`
+    redeems the previous ticket, so the host gather overlaps device compute.
+    Results are bit-exact vs the synchronous path.
     """
     if step_fn is None:
         if distance_fn is None:
@@ -399,6 +450,12 @@ def bang_search(
     )
     filt0 = bloomlib.bloom_set(bloomlib.bloom_init(B, cfg.bloom_z), med[:, None])
     hist0 = jnp.full((B, C), INVALID_ID, jnp.int32).at[:, 0].set(med)
+    # Warm-start ticket: the medoid fetch of iteration 0 redeems a prefetch
+    # issued before the loop, so even the first hop's gather can overlap the
+    # worklist/bloom initialisation above.
+    tok0 = (
+        jnp.zeros((0,), jnp.int32) if prefetch_fn is None else prefetch_fn(med)
+    )
     state = _State(
         wl=wl0,
         filt=filt0,
@@ -407,6 +464,7 @@ def bang_search(
         u=med,
         active=jnp.ones((B,), jnp.bool_),
         it=jnp.zeros((), jnp.int32),
+        tok=tok0,
     )
 
     def cond(s: _State) -> Array:
@@ -417,7 +475,12 @@ def bang_search(
         #    is the op the eager selection (§4.6) exists to overlap: u was
         #    chosen in the previous iteration *before* that iteration's merge,
         #    so this gather has no data dependency on the previous merge.
-        nbrs = neighbor_fn(s.u)                                   # (B, R)
+        #    With the hostio prefetched exchange the overlap is real: the
+        #    ticket in the loop state redeems the gather issued last hop.
+        if prefetch_fn is None:
+            nbrs = neighbor_fn(s.u)                               # (B, R)
+        else:
+            nbrs = neighbor_fn(s.u, s.tok)                        # (B, R)
         valid = (nbrs >= 0) & s.active[:, None]
 
         # 2. Bloom filter: drop already-seen neighbours, insert fresh ones.
@@ -426,7 +489,15 @@ def bang_search(
         # 3-5. Distances + sort + select + merge: the StepFn boundary
         #    ("reference" XLA / "staged" per-stage kernels / "fused"
         #    megakernel -- one pallas_call, candidates never leave VMEM).
-        wl, u_next, active = step_fn.step(s.wl, nbrs, fresh, s.active)
+        #    The prefetched path additionally issues hop k+1's expected
+        #    gather inside the step (§4.6 seam) and returns its ticket.
+        if prefetch_fn is None:
+            wl, u_next, active = step_fn.step(s.wl, nbrs, fresh, s.active)
+            tok = s.tok
+        else:
+            wl, u_next, active, tok = step_fn.step_with_prefetch(
+                s.wl, nbrs, fresh, s.active, prefetch_fn
+            )
 
         # 6. Record the expansion for re-ranking (paper: every candidate sent
         #    to the CPU is retained for the final re-rank).
@@ -437,7 +508,7 @@ def bang_search(
         )
         hist_len = s.hist_len + active.astype(jnp.int32)
 
-        return _State(wl, filt, hist, hist_len, u_next, active, s.it + 1)
+        return _State(wl, filt, hist, hist_len, u_next, active, s.it + 1, tok)
 
     final = jax.lax.while_loop(cond, body, state)
     return SearchResult(
@@ -478,14 +549,22 @@ def search_base(
     adjacency_np: np.ndarray,
     medoid: int,
     cfg: SearchConfig,
+    *,
+    neighbor_fn: NeighborFn | None = None,
+    prefetch_fn: PrefetchFn | None = None,
 ) -> SearchResult:
+    """BANG Base. The default neighbour source is the inline synchronous
+    host callback; the hostio subsystem passes its own (neighbor_fn,
+    prefetch_fn) exchange (multi-worker service + hot cache + double
+    buffering) -- bit-exact either way."""
     return bang_search(
         queries,
-        neighbor_fn=host_neighbor_fn(adjacency_np),
+        neighbor_fn=neighbor_fn or host_neighbor_fn(adjacency_np),
         step_fn=_adc_step_fn(table, codes, cfg),
         medoid=medoid,
         n_points=codes.shape[0],
         cfg=cfg,
+        prefetch_fn=prefetch_fn,
     )
 
 

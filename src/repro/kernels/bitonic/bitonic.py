@@ -23,9 +23,15 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
-INT_MAX = jnp.int32(2**31 - 1)
+# numpy (not jnp) scalar: this module is imported lazily from *inside*
+# traced step functions, and a module-level jnp constant created while a
+# trace is active would capture that trace's tracer and poison every later
+# use (UnexpectedTracerError). numpy scalars are trace-inert and behave
+# identically in jnp expressions.
+INT_MAX = np.int32(2**31 - 1)
 
 
 def _compare_exchange(d, i, v, j: int, k: int):

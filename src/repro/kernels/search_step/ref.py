@@ -19,8 +19,14 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-INVALID = jnp.int32(2**31 - 1)
+# numpy (not jnp) scalar: this module is imported lazily from *inside*
+# traced step functions, and a module-level jnp constant created while a
+# trace is active would capture that trace's tracer and poison every later
+# use (UnexpectedTracerError). numpy scalars are trace-inert and behave
+# identically in jnp expressions.
+INVALID = np.int32(2**31 - 1)
 
 
 def _first_unvisited(ids: jax.Array, visited: jax.Array):

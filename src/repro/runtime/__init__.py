@@ -2,7 +2,10 @@
 #   executor -- jit-cached, shape-bucketed three-stage search pipeline (1 device)
 #   sharded  -- the same contract over a device mesh (graph > one device)
 #   serving  -- streaming micro-batch serve loop with double buffering
+#   hostio   -- async host-I/O subsystem (multi-worker neighbour service,
+#               device-resident hot-adjacency cache, prefetched exchange)
 from .executor import SearchExecutor, SearchHandle, bucket_size, pad_batch  # noqa: F401
+from .hostio import HostIOConfig, HostIORuntime, NeighborService  # noqa: F401
 from .serving import BatchReport, ServePipeline, ServeStats  # noqa: F401
 from .sharded import SHARDED_VARIANTS, ShardedSearchExecutor  # noqa: F401
 from .train_loop import TrainLoopConfig, train_loop  # noqa: F401

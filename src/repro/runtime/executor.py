@@ -64,6 +64,8 @@ from repro.core.bang import SearchStats
 from repro.core.search import SearchConfig
 from repro.core.vamana import VamanaGraph
 
+from .hostio import HostIOConfig, HostIORuntime
+
 Array = jax.Array
 
 VARIANTS = ("inmem", "base", "exact")
@@ -120,21 +122,39 @@ class SearchExecutor:
         data_np: np.ndarray | None = None,
         adjacency_dev: Array | None = None,
         min_bucket: int = 8,
+        hostio: HostIOConfig | None = None,
     ) -> None:
         if variant not in VARIANTS:
             raise ValueError(f"unknown variant {variant!r}, expected one of {VARIANTS}")
         if variant == "exact" and data_dev is None:
             raise ValueError("exact variant needs device-resident data")
+        if hostio is not None and variant != "base":
+            raise ValueError(
+                "hostio= only applies to the host-resident-graph variant "
+                f"'base', got {variant!r}"
+            )
         self.variant = variant
         self._codec = codec
         self._codes = codes
         self._graph = graph
         self._data_dev = data_dev
         self._data_np = data_np
+        self._hostio = hostio
+        self.hostio_runtime = None
+        self._exchange = (None, None)
         if variant == "base":
-            # BANG Base: the graph stays in host RAM behind a pure_callback.
+            # BANG Base: the graph stays in host RAM behind a pure_callback --
+            # inline and synchronous by default, or served by the hostio
+            # subsystem (multi-worker service + hot cache + prefetch) when a
+            # HostIOConfig is given. Bit-exact either way.
             self._adjacency = None
             self._adjacency_np = np.asarray(graph.adjacency)
+            if hostio is not None:
+                self.hostio_runtime = HostIORuntime(
+                    hostio, [np.asarray(self._adjacency_np, np.int32)],
+                    self._adjacency_np, medoid=graph.medoid, name="hostio-base",
+                )
+                self._exchange = self.hostio_runtime.base_exchange()
         else:
             self._adjacency = (
                 adjacency_dev if adjacency_dev is not None
@@ -144,7 +164,13 @@ class SearchExecutor:
         self._init_serving_state(min_bucket)
 
     def _init_serving_state(self, min_bucket: int) -> None:
-        """Shared dispatch/finish bookkeeping; both executor classes call it."""
+        """Shared dispatch/finish bookkeeping; both executor classes call it.
+
+        Host-I/O state (`_hostio`/`hostio_runtime`/`_exchange`) is NOT set
+        here: each constructor assigns it explicitly before (and, for the
+        host-graph variants, after) this call, so a future constructor that
+        forgets it fails fast instead of silently serving without a service.
+        """
         self._min_bucket = min_bucket
         self._cache: dict[Any, Any] = {}
         self.trace_counts: dict[Any, int] = {}
@@ -171,11 +197,23 @@ class SearchExecutor:
         """Device adjacency, for sharing across same-index executors."""
         return self._adjacency
 
+    @property
+    def hostio_service(self):
+        """The live NeighborService (None unless hostio is configured)."""
+        rt = self.hostio_runtime
+        return None if rt is None else rt.service
+
     # ------------------------------------------------------------- compiling
     def _compiled(self, bucket: int, d: int, k: int, rerank: bool,
                   cfg: SearchConfig):
-        """Cache lookup + compile accounting; `_compile` builds the program."""
-        key = (bucket, d, k, rerank, cfg)
+        """Cache lookup + compile accounting; `_compile` builds the program.
+
+        The hostio config rides the key: an executor's host-I/O wiring
+        (worker pool, hot cache, prefetch) is fixed at construction, but
+        keying it keeps executables from ever being confused across
+        executors whose caches are merged or persisted externally.
+        """
+        key = (bucket, d, k, rerank, cfg, self._hostio)
         entry = self._cache.get(key)
         if entry is not None:
             return entry, 0.0
@@ -217,9 +255,11 @@ class SearchExecutor:
                         self._graph.medoid, cfg,
                     )
                 else:
+                    neighbor_fn, prefetch_fn = self._exchange
                     res = searchlib.search_base(
                         queries, table, self._codes, self._adjacency_np,
                         self._graph.medoid, cfg,
+                        neighbor_fn=neighbor_fn, prefetch_fn=prefetch_fn,
                     )
                 if rerank:
                     if variant == "base" or self._data_dev is None:
@@ -259,28 +299,59 @@ class SearchExecutor:
         return compiled(q_dev)
 
     # ------------------------------------------------------------ accounting
+    def _hot_cache_fields(self, host_rows_in: int) -> dict:
+        """Hot-adjacency-cache accounting shared by both executor classes.
+
+        `hot_cache_hit_rate` is the *measured* service-side hit rate (0.0
+        before any traffic); `host_bytes_saved_per_hop` scales the analytic
+        rows-back leg by it -- the host-link bytes the device-resident cache
+        absorbed. `host_link_bytes` in the caller is reduced by the saving,
+        so with no cache (or no traffic yet) the legacy identity
+        host_link == ids_out + rows_in still holds exactly.
+        """
+        rt = self.hostio_runtime
+        if rt is None or rt.cache is None:
+            return {
+                "hot_cache_rows": 0,
+                "hot_cache_hit_rate": 0.0,
+                "host_bytes_saved_per_hop": 0,
+            }
+        rate = rt.service.cache_hit_rate()
+        return {
+            "hot_cache_rows": rt.cache.n_rows,
+            "hot_cache_hit_rate": rate,
+            "host_bytes_saved_per_hop": int(host_rows_in * rate),
+        }
+
     def exchange_bytes_per_hop(self, batch: int) -> dict:
         """Logical link bytes one hop moves, same schema as the sharded peer.
 
         A single device pays no inter-device collectives; the "base" variant
         pays the paper's host link each hop -- (bucket,) int32 frontier ids
         out and (bucket, R) int32 adjacency rows back over the pure_callback
-        (§4.1/§4.3). Device-resident-graph variants move nothing.
+        (§4.1/§4.3). Device-resident-graph variants move nothing. With the
+        hostio hot cache, `host_bytes_saved_per_hop` (measured hit rate x
+        the rows-back leg) is subtracted from `host_link_bytes`: hit rows
+        never cross the link.
         """
         bucket = self._bucket_for(batch)
         adj = self._adjacency_np if self._adjacency is None else self._adjacency
         R = adj.shape[1]
         host_ids_out = bucket * 4 if self.variant == "base" else 0
         host_rows_in = bucket * R * 4 if self.variant == "base" else 0
+        hot = self._hot_cache_fields(host_rows_in)
         return {
             "payload_bytes": 0,
             "collective_bytes": 0,
             "ring_bytes_per_device": 0,
             "host_ids_out_bytes": host_ids_out,
             "host_rows_in_bytes": host_rows_in,
-            "host_link_bytes": host_ids_out + host_rows_in,
+            "host_link_bytes": (
+                host_ids_out + host_rows_in - hot["host_bytes_saved_per_hop"]
+            ),
             "model_shards": 1,
             "data_shards": 1,
+            **hot,
         }
 
     # -------------------------------------------------------------- serving

@@ -1,0 +1,128 @@
+"""Async host-I/O subsystem: the paper's CPU half as a first-class service.
+
+BANG's central claim (§4) is that the CPU-side graph fetch and the GPU-side
+distance phases run *concurrently*. The `base`/`sharded-base` variants until
+now served adjacency through synchronous inline `pure_callback`s -- every
+hop blocked the device on a single-threaded host gather. This package models
+the host side the way the paper does, behind one `NeighborService`
+interface:
+
+    service.py    multi-worker host neighbour service: one thread pool per
+                  graph partition, request queue, batched chunked gathers,
+                  queue-depth / latency / hit-rate counters.
+    cache.py      device-resident hot-adjacency cache: top-in-degree rows
+                  pinned in device memory, served without crossing the host
+                  link, masked-merged bit-exactly with the host path.
+    prefetch.py   double-buffered frontier exchange: hop k+1's expected
+                  frontier (§4.6 eager candidate) is issued to the worker
+                  pool while the device is still merging hop k; a sequence
+                  ticket threads the ordering through the traced loop and
+                  `overlap_fraction` measures how much gather time was hidden.
+
+`HostIOConfig` is the serving-surface knob set (`workers`, `hot_cache_rows`,
+`prefetch`); `HostIORuntime` bundles the live pieces (service + optional
+cache + exchange builders) for an executor. Enabled on
+`SearchExecutor(variant="base", hostio=...)` and
+`ShardedSearchExecutor(variant="sharded-base", hostio=...)`; any
+configuration returns bit-exact ids and distances vs the synchronous PR-3/4
+paths in every kernel mode (tests/test_hostio.py pins the matrix).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .cache import HotAdjacencyCache  # noqa: F401
+from .prefetch import make_base_exchange, make_shard_exchange  # noqa: F401
+from .service import NeighborService  # noqa: F401
+
+__all__ = [
+    "HostIOConfig",
+    "HostIORuntime",
+    "HotAdjacencyCache",
+    "NeighborService",
+    "make_base_exchange",
+    "make_shard_exchange",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class HostIOConfig:
+    """Host-I/O serving knobs (part of the executor compile-cache key).
+
+    workers         host gather threads per graph partition (>= 1)
+    hot_cache_rows  top-in-degree adjacency rows pinned on device (0 = off)
+    prefetch        double-buffer the frontier exchange (issue hop k+1's
+                    gather while the device merges hop k)
+    """
+
+    workers: int = 1
+    hot_cache_rows: int = 0
+    prefetch: bool = False
+
+    def __post_init__(self) -> None:
+        if self.workers < 1:
+            raise ValueError(f"workers must be >= 1, got {self.workers}")
+        if self.hot_cache_rows < 0:
+            raise ValueError(
+                f"hot_cache_rows must be >= 0, got {self.hot_cache_rows}"
+            )
+
+
+class HostIORuntime:
+    """Live host-I/O state for one executor: service + cache + exchanges.
+
+    `partitions` are the host-RAM graph partitions the service gathers from
+    (one for "base", one per model shard for "sharded-base"); `adjacency` is
+    the full (padded) adjacency the hot cache ranks and copies rows out of.
+    """
+
+    def __init__(
+        self,
+        config: HostIOConfig,
+        partitions,
+        adjacency: np.ndarray,
+        *,
+        medoid: int | None = None,
+        name: str = "hostio",
+    ) -> None:
+        self.config = config
+        self.service = NeighborService(
+            partitions, workers=config.workers, name=name
+        )
+        self.cache = (
+            HotAdjacencyCache(adjacency, config.hot_cache_rows, medoid=medoid)
+            if config.hot_cache_rows > 0
+            else None
+        )
+
+    def base_exchange(self):
+        """(neighbor_fn, prefetch_fn) for the single-device base variant."""
+        return make_base_exchange(
+            self.service, cache=self.cache, prefetch=self.config.prefetch
+        )
+
+    def shard_exchange(self, axis: str = "model"):
+        """(neighbor_fn, prefetch_fn) for the mesh sharded-base variant."""
+        return make_shard_exchange(
+            self.service, axis=axis, cache=self.cache,
+            prefetch=self.config.prefetch,
+        )
+
+    # Lifecycle + stats passthrough (ServePipeline drives these).
+    def start(self) -> "HostIORuntime":
+        self.service.start()
+        return self
+
+    def stop(self) -> None:
+        self.service.stop()
+
+    def stats(self) -> dict:
+        s = self.service.stats()
+        s["hot_cache_rows"] = 0 if self.cache is None else self.cache.n_rows
+        s["hot_cache_device_bytes"] = (
+            0 if self.cache is None else self.cache.device_bytes()
+        )
+        s["prefetch"] = self.config.prefetch
+        return s

@@ -1,0 +1,150 @@
+"""Prefetched frontier exchange: double-buffering the host link (§4.6).
+
+The paper's eager candidate selection exists so the CPU-side fetch of hop
+k+1 can start while the GPU is still sorting/merging hop k. PR 3's inline
+callbacks could not express that -- one `pure_callback` both requested and
+returned the rows, so the device blocked for the whole host gather every
+hop. This module splits the exchange across the callback boundary:
+
+    issue   (end of hop k)    ships the §4.6 eagerly-selected expected
+                              frontier to `NeighborService.issue`, which
+                              enqueues the gather on the worker pool and
+                              returns a (1,) int32 sequence ticket
+                              immediately;
+    collect (top of hop k+1)  redeems the ticket via `NeighborService.
+                              collect`, blocking only for whatever gather
+                              time was NOT hidden behind the device's merge
+                              + bookkeeping work in between.
+
+The ticket is a real data dependency (issue -> token -> collect), so XLA can
+neither reorder the pair nor dead-code-eliminate the issue; and because it
+carries the actual sequence number, concurrently executing programs (the
+double-buffered serve pipeline) can interleave callbacks on one service
+without cross-matching. Prediction is best-effort: the expected frontier is
+selected *before* the convergence masking, so `collect` validates the issued
+lanes and inline-gathers any that changed -- results are bit-exact vs the
+synchronous path regardless of prediction quality, and the service's
+`overlap_fraction` stat reports how much gather time the prefetch actually
+hid.
+
+`make_base_exchange` / `make_shard_exchange` build the (neighbor_fn,
+prefetch_fn) pair for the two host-graph placements ("base" /
+"sharded-base"), layering the `HotAdjacencyCache` masked merge on top when a
+cache is given: hit lanes are served from device memory and masked out of
+the ownership mask both at issue and at collect time, so the host never
+gathers (or prefetches) a cached row.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.compat import pure_callback
+from repro.core.distributed import _owned_at
+
+from .cache import HotAdjacencyCache
+from .service import NeighborService
+
+__all__ = ["make_base_exchange", "make_shard_exchange"]
+
+_TOKEN_SPEC = jax.ShapeDtypeStruct((1,), jnp.int32)
+
+
+def _probe(cache: HotAdjacencyCache | None, u):
+    """(device rows or None, hit mask) -- all-miss when no cache is fitted."""
+    if cache is None:
+        return None, jnp.zeros(u.shape, jnp.bool_)
+    return cache.probe(u)
+
+
+def make_base_exchange(
+    service: NeighborService,
+    *,
+    cache: HotAdjacencyCache | None = None,
+    prefetch: bool = False,
+):
+    """(neighbor_fn, prefetch_fn) for the single-device "base" variant.
+
+    The whole graph is one host partition (shard 0). `neighbor_fn` takes
+    `(u)` without prefetch and `(u, token)` with it; `prefetch_fn` is None
+    when prefetch is off. Results are bit-exact vs
+    `core.search.host_neighbor_fn` for any worker count / cache size.
+    """
+    n_loc, R = service.n_loc, service.R
+    shard0 = jnp.zeros((), jnp.int32)
+
+    def _request_mask(u):
+        dev_rows, hit = _probe(cache, u)
+        rel, own = _owned_at(0, n_loc, u)
+        return dev_rows, hit, rel, own & ~hit
+
+    def neighbor_fn(u, tok=None):
+        dev_rows, hit, rel, own = _request_mask(u)
+        res = jax.ShapeDtypeStruct((u.shape[0], R), jnp.int32)
+        if prefetch:
+            contrib = pure_callback(
+                service.collect, res, shard0, rel, own, hit, tok
+            )
+        else:
+            contrib = pure_callback(service.request, res, shard0, rel, own, hit)
+        rows = contrib - 1
+        if cache is not None:
+            rows = jnp.where(hit[:, None], dev_rows, rows)
+        return rows
+
+    if not prefetch:
+        return neighbor_fn, None
+
+    def prefetch_fn(u_pred):
+        _, _, rel, own = _request_mask(u_pred)
+        return pure_callback(service.issue, _TOKEN_SPEC, shard0, rel, own)
+
+    return neighbor_fn, prefetch_fn
+
+
+def make_shard_exchange(
+    service: NeighborService,
+    *,
+    axis: str = "model",
+    cache: HotAdjacencyCache | None = None,
+    prefetch: bool = False,
+):
+    """(neighbor_fn, prefetch_fn) for the mesh "sharded-base" variant.
+
+    Runs INSIDE shard_map: each model shard redeems its own ticket against
+    its own host partition, then the masked psum over `axis` reconstructs
+    the full row exchange exactly as `core.distributed.host_shard_neighbor_fn`
+    does. Cache-hit lanes are masked out of every shard's ownership before
+    the callback (their psum contribution is 0), then served from the
+    replicated device cache -- so a hit skips the host link on every shard.
+    """
+    n_loc, R = service.n_loc, service.R
+
+    def _request_mask(u):
+        shard = jax.lax.axis_index(axis)
+        dev_rows, hit = _probe(cache, u)
+        rel, own = _owned_at(shard, n_loc, u)
+        return shard, dev_rows, hit, rel, own & ~hit
+
+    def neighbor_fn(u, tok=None):
+        shard, dev_rows, hit, rel, own = _request_mask(u)
+        res = jax.ShapeDtypeStruct((u.shape[0], R), jnp.int32)
+        if prefetch:
+            contrib = pure_callback(
+                service.collect, res, shard, rel, own, hit, tok
+            )
+        else:
+            contrib = pure_callback(service.request, res, shard, rel, own, hit)
+        rows = jax.lax.psum(contrib, axis) - 1
+        if cache is not None:
+            rows = jnp.where(hit[:, None], dev_rows, rows)
+        return rows
+
+    if not prefetch:
+        return neighbor_fn, None
+
+    def prefetch_fn(u_pred):
+        shard, _, _, rel, own = _request_mask(u_pred)
+        return pure_callback(service.issue, _TOKEN_SPEC, shard, rel, own)
+
+    return neighbor_fn, prefetch_fn

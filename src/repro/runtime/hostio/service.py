@@ -1,0 +1,407 @@
+"""Multi-worker host neighbour service: the paper's CPU half as a subsystem.
+
+BANG's CPU side (§4.1) is a real service: per GPU, host threads drain a queue
+of frontier batches and gather adjacency rows from the host-RAM graph while
+the GPU computes distances. PR 3 modelled that service as an *inline*
+single-shot `pure_callback` -- correct, but structurally wrong: every hop
+blocked the device on one host thread doing one synchronous gather, with no
+queue, no concurrency and no way to measure contention.
+
+`NeighborService` is the host side done properly:
+
+  * **One worker pool per shard partition.** Each graph partition (one for
+    the single-device "base" variant, one per model shard for
+    "sharded-base") owns `workers` daemon threads draining a request queue.
+  * **Batched gathers.** A request's owned lanes are split into up to
+    `workers` contiguous chunks gathered concurrently -- the service-side
+    analogue of the paper's multi-threaded `memcpy` fan-out.
+  * **Two protocols.** `request()` is the synchronous path (the callback
+    blocks until the pooled gather lands). `issue()`/`collect()` split the
+    exchange across the callback boundary for the prefetched frontier
+    exchange (`repro.runtime.hostio.prefetch`): `issue` enqueues hop k+1's
+    expected gather and returns a sequence ticket immediately; `collect`
+    waits on that ticket one hop later, inline-gathering any lanes whose
+    prediction missed so results stay bit-exact.
+  * **Counters.** Queue depth, per-request latency, rows gathered,
+    cache-hit/miss lanes (the device-resident hot cache reports its hit mask
+    through the callback), prefetch hit/miss/mismatch counts, and the
+    measured `overlap_fraction` -- the share of host gather time hidden
+    behind device compute (`stats()`).
+
+The gather math is exactly `core.distributed.host_shard_service`'s: owned
+lanes contribute `partition[rel] + 1`, everything else 0, so a psum across
+shards (or a plain `-1` for the single-partition base variant) reconstructs
+the row exchange bit-for-bit. The service never touches host memory for
+non-owned or cache-hit lanes -- tests/test_hostio.py pins the
+exactly-once-per-miss property.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+
+import numpy as np
+
+__all__ = ["NeighborService"]
+
+# Below this many owned lanes a request is gathered by a single worker: the
+# chunk bookkeeping would cost more than the copy it parallelises.
+_MIN_CHUNK = 8
+
+# Ceiling on outstanding prefetch tickets. Every compiled program's final
+# hop issues a ticket nobody collects (the loop exits before redeeming it),
+# so a long-running server would otherwise leak one pending gather per
+# program execution. Evicting is always safe: collect() of an evicted seq
+# falls back to an inline gather (counted as a prefetch miss), bit-exact.
+_MAX_PENDING = 64
+
+
+class _Pending:
+    """One in-flight prefetched gather (issue() -> collect())."""
+
+    __slots__ = ("rel", "own", "out", "done", "t_issue", "t_done")
+
+    def __init__(self, rel: np.ndarray, own: np.ndarray) -> None:
+        self.rel = rel
+        self.own = own
+        self.out: np.ndarray | None = None
+        self.done = threading.Event()
+        self.t_issue = time.perf_counter()
+        self.t_done = 0.0
+
+
+class NeighborService:
+    """Thread-pooled host adjacency gathers over pinned graph partitions.
+
+    `partitions[s]` holds the contiguous rows `[s*n_loc, (s+1)*n_loc)` of the
+    (padded) adjacency in host RAM; all partitions share one `(n_loc, R)`
+    shape. `workers` threads serve each partition's queue. The service is
+    safe to share between concurrently-executing compiled programs (the
+    ServePipeline double-buffers dispatches): every prefetch ticket is a
+    unique sequence number, so interleaved issue/collect streams never
+    cross-match.
+    """
+
+    def __init__(self, partitions, *, workers: int = 1, name: str = "hostio"):
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        self._parts = [
+            np.ascontiguousarray(np.asarray(p, np.int32)) for p in partitions
+        ]
+        if not self._parts:
+            raise ValueError("need at least one graph partition")
+        n_loc, R = self._parts[0].shape
+        if any(p.shape != (n_loc, R) for p in self._parts):
+            raise ValueError("host partitions must share one (n_loc, R) shape")
+        self.n_loc, self.R = n_loc, R
+        self.workers = workers
+        self.name = name
+        self._queues: list[queue.Queue] | None = None
+        self._threads: list[threading.Thread] = []
+        self._lock = threading.Lock()
+        self._seq = 0
+        self._pending: dict[int, _Pending] = {}
+        self.reset_stats()
+
+    # ------------------------------------------------------------- lifecycle
+    @property
+    def started(self) -> bool:
+        return self._queues is not None
+
+    def start(self) -> "NeighborService":
+        """Spin up the per-partition worker pools (idempotent)."""
+        self._ensure_started()
+        return self
+
+    def _ensure_started(self) -> list | None:
+        """Start-if-needed and return the live queue list (or None mid-stop)."""
+        with self._lock:
+            if self._queues is None:
+                self._queues = [queue.Queue() for _ in self._parts]
+                self._threads = []
+                for s, q in enumerate(self._queues):
+                    for w in range(self.workers):
+                        th = threading.Thread(
+                            target=self._worker_loop, args=(q,),
+                            name=f"{self.name}-p{s}-w{w}", daemon=True,
+                        )
+                        th.start()
+                        self._threads.append(th)
+            return self._queues
+
+    def _enqueue(self, shard: int, item) -> bool:
+        """Queue a work item unless a concurrent stop() won the race.
+
+        The lock serialises this against stop(): an item queued while the
+        pools are live lands *before* stop()'s shutdown sentinels, so its
+        worker always executes it; once stop() has run, the caller gets
+        False and must do the work inline. This is what makes one service
+        safe to share between pipelines (BangIndex caches executors per
+        config, so two ServePipelines can own the same service).
+        """
+        with self._lock:
+            if self._queues is None:
+                return False
+            self._bump_locked(max_queue_depth=self._queues[shard].qsize() + 1)
+            self._queues[shard].put(item)
+            return True
+
+    def stop(self) -> None:
+        """Drain and join the pools (idempotent; start() revives them)."""
+        with self._lock:
+            queues, threads = self._queues, self._threads
+            self._queues, self._threads = None, []
+            if queues is not None:
+                # Sentinels go in under the same lock that guards _enqueue:
+                # everything queued while the pools were live precedes them.
+                for q in queues:
+                    for _ in range(self.workers):
+                        q.put(None)
+        for th in threads:
+            th.join(timeout=5.0)
+
+    def _worker_loop(self, q: queue.Queue) -> None:
+        while True:
+            item = q.get()
+            if item is None:
+                return
+            fn = item
+            try:
+                fn()
+            except Exception as e:  # pragma: no cover - defensive
+                # Work items release their own latches in finally blocks, so
+                # nothing deadlocks; keep the worker alive for later requests
+                # (the failed request surfaces through its own result path).
+                import sys
+
+                print(f"[{self.name}] worker error: {e!r}", file=sys.stderr)
+            finally:
+                q.task_done()
+
+    # -------------------------------------------------------------- counters
+    def reset_stats(self) -> None:
+        with self._lock:
+            self._c = {
+                "requests": 0,
+                "rows_gathered": 0,
+                "host_miss_lanes": 0,
+                "cache_hit_lanes": 0,
+                "prefetch_issued": 0,
+                "prefetch_hits": 0,
+                "prefetch_misses": 0,
+                "prefetch_lane_mismatches": 0,
+                "max_queue_depth": 0,
+                "gather_s_total": 0.0,
+                "gather_s_hidden": 0.0,
+                "latency_s_total": 0.0,
+            }
+
+    def _bump_locked(self, **kw) -> None:
+        """Counter update; caller must hold self._lock (it is not reentrant)."""
+        for k, v in kw.items():
+            if k == "max_queue_depth":
+                self._c[k] = max(self._c[k], v)
+            else:
+                self._c[k] += v
+
+    def _bump(self, **kw) -> None:
+        with self._lock:
+            self._bump_locked(**kw)
+
+    def cache_hit_rate(self) -> float:
+        """Measured hot-cache hit rate over all lanes that needed a row."""
+        with self._lock:
+            hits = self._c["cache_hit_lanes"]
+            misses = self._c["host_miss_lanes"]
+        total = hits + misses
+        return hits / total if total else 0.0
+
+    def overlap_fraction(self) -> float:
+        """Share of host gather time hidden behind device compute.
+
+        Per prefetched request, the hidden portion is the part of
+        [issue, done] that elapsed before collect() started waiting; the
+        fraction aggregates hidden time over total prefetched gather time.
+        0.0 when nothing was prefetched.
+        """
+        with self._lock:
+            total = self._c["gather_s_total"]
+            hidden = self._c["gather_s_hidden"]
+        return min(hidden / total, 1.0) if total > 0 else 0.0
+
+    def stats(self) -> dict:
+        """Snapshot of the cumulative counters (JSON-serialisable)."""
+        with self._lock:
+            c = dict(self._c)
+        n = max(c["requests"], 1)
+        return {
+            **{k: v for k, v in c.items()
+               if k not in ("gather_s_total", "gather_s_hidden")},
+            "mean_latency_ms": c["latency_s_total"] / n * 1e3,
+            "cache_hit_rate": self.cache_hit_rate(),
+            "overlap_fraction": self.overlap_fraction(),
+            "workers": self.workers,
+            "partitions": len(self._parts),
+        }
+
+    # --------------------------------------------------------------- gathers
+    def _gather(
+        self, shard: int, rel: np.ndarray, own: np.ndarray, pooled: bool = True
+    ) -> np.ndarray:
+        """Gather one request's owned lanes (+1-shifted contributions).
+
+        With `pooled=True` the owned lanes split into up to `workers`
+        contiguous chunks run concurrently on the partition's pool; lanes the
+        shard does not own (or that the hot cache already served) contribute
+        0 and never index host memory. `pooled=False` gathers serially -- the
+        prefetch path uses it *inside* a pool slot, so a request must never
+        block that slot waiting on chunk tasks queued behind it (two
+        concurrent prefetches could otherwise occupy every worker and
+        deadlock).
+        """
+        rel = np.asarray(rel)
+        own = np.asarray(own, bool)
+        out = np.zeros((rel.shape[0], self.R), np.int32)
+        lanes = np.nonzero(own)[0]
+        if lanes.size == 0:
+            return out
+        # Every host read is counted here, at the gather site, so re-gathers
+        # (mismatched prefetch lanes) and never-collected prefetches show up
+        # in `rows_gathered` -- it measures actual host memory traffic, while
+        # `host_miss_lanes` stays the logical once-per-request count.
+        self._bump(rows_gathered=int(lanes.size))
+        part = self._parts[shard]
+        n_chunks = min(self.workers, max(1, lanes.size // _MIN_CHUNK))
+        if n_chunks == 1 or not pooled:
+            # Serial fast path (tiny request, or in-slot prefetch gather).
+            out[lanes] = part[rel[lanes]] + 1
+            return out
+        remaining = threading.Semaphore(0)
+
+        def task(chunk: np.ndarray):
+            def run() -> None:
+                try:
+                    out[chunk] = part[rel[chunk]] + 1
+                finally:
+                    remaining.release()
+            return run
+
+        chunks = np.array_split(lanes, n_chunks)
+        for chunk in chunks:
+            item = task(chunk)
+            if not self._enqueue(shard, item):
+                item()          # pools stopped mid-flight: degrade inline
+        for _ in chunks:        # every path (worker or inline) releases once
+            remaining.acquire()
+        return out
+
+    # ----------------------------------------------------- callback protocol
+    # Pools auto-start on first use: executors can be driven directly
+    # (without a ServePipeline owning the lifecycle), and an explicit
+    # start() merely warms the threads up front. stop() remains the
+    # tear-down; a stopped service revives itself if traffic returns.
+    def request(self, shard, rel, own, cache_hit) -> np.ndarray:
+        """Synchronous path: block on the pooled gather (no prefetch)."""
+        self._ensure_started()
+        t0 = time.perf_counter()
+        shard = int(np.asarray(shard))
+        own = np.asarray(own, bool)
+        out = self._gather(shard, rel, own)
+        self._account(shard, own, np.asarray(cache_hit, bool))
+        self._bump(requests=1, latency_s_total=time.perf_counter() - t0)
+        return out
+
+    def issue(self, shard, rel, own) -> np.ndarray:
+        """Enqueue hop k+1's expected gather; return a (1,) sequence ticket.
+
+        The gather runs on the partition pool while the device is still
+        computing hop k; `collect()` redeems the ticket one hop later.
+        """
+        self._ensure_started()
+        shard = int(np.asarray(shard))
+        rel = np.array(rel, np.int32, copy=True)
+        own = np.array(own, bool, copy=True)
+        p = _Pending(rel, own)
+        with self._lock:
+            self._seq += 1
+            seq = self._seq
+            self._pending[seq] = p
+            while len(self._pending) > _MAX_PENDING:
+                # Oldest-first eviction (dict preserves insertion order);
+                # a later collect of an evicted ticket inline-gathers.
+                self._pending.pop(next(iter(self._pending)))
+        self._bump(prefetch_issued=1)
+
+        def run() -> None:
+            try:
+                p.out = self._gather(shard, p.rel, p.own, pooled=False)
+            finally:
+                # Always release the waiter; collect() treats a ticket whose
+                # gather died (out is None) as a miss and gathers inline.
+                p.t_done = time.perf_counter()
+                p.done.set()
+
+        # One pool slot per prefetched request: concurrent requests (the
+        # double-buffered pipeline) spread across the workers. _enqueue
+        # returns False if stop() won the race -- then gather inline.
+        if not (p.own.any() and self._enqueue(shard, run)):
+            run()
+        return np.array([seq], np.int32)
+
+    def collect(self, shard, rel, own, cache_hit, seq) -> np.ndarray:
+        """Redeem a prefetch ticket; inline-gather whatever it missed.
+
+        Bit-exactness does not depend on the prediction: lanes whose issued
+        (rel, own) disagree with the ones requested now are re-gathered
+        inline (counted as `prefetch_lane_mismatches`), and an unknown or
+        never-issued ticket falls back to a full synchronous gather
+        (`prefetch_misses`).
+        """
+        t0 = time.perf_counter()
+        shard = int(np.asarray(shard))
+        rel = np.asarray(rel)
+        own = np.asarray(own, bool)
+        seq = int(np.asarray(seq).ravel()[0])
+        with self._lock:
+            p = self._pending.pop(seq, None)
+        if p is not None:
+            # Bounded wait: if the pools were stopped with the gather still
+            # queued the event may never fire -- fall back to inline rather
+            # than hang the compiled program.
+            p.done.wait(timeout=60.0)
+        if p is None or p.out is None:
+            out = self._gather(shard, rel, own)
+            self._bump(prefetch_misses=1)
+        else:
+            dur = max(p.t_done - p.t_issue, 0.0)
+            hidden = max(min(p.t_done, t0) - p.t_issue, 0.0)
+            self._bump(
+                prefetch_hits=1, gather_s_total=dur,
+                gather_s_hidden=min(hidden, dur),
+            )
+            reuse = (p.own == own) & (~own | (p.rel == rel))
+            if reuse.all():
+                out = p.out
+            else:
+                redo = own & ~reuse
+                patch = self._gather(shard, rel, redo)
+                out = np.where(reuse[:, None], p.out, patch)
+                # Issued-but-unwanted lanes must contribute 0 again.
+                out = np.where((own | reuse)[:, None], out, 0).astype(np.int32)
+                self._bump(prefetch_lane_mismatches=int(redo.sum()))
+        self._account(shard, own, np.asarray(cache_hit, bool))
+        self._bump(requests=1, latency_s_total=time.perf_counter() - t0)
+        return out
+
+    def _account(self, shard: int, own: np.ndarray, cache_hit: np.ndarray):
+        # Misses: every lane a request logically needed from host RAM (each
+        # valid id is owned by exactly one shard, so summing over shards
+        # counts each global lane once; `rows_gathered` -- counted inside
+        # _gather -- additionally includes prefetch re-gathers). Hits: the
+        # replicated hit mask would be counted once per model shard, so only
+        # partition 0's callbacks report it.
+        self._bump(
+            host_miss_lanes=int(own.sum()),
+            **({"cache_hit_lanes": int(cache_hit.sum())} if shard == 0 else {}),
+        )

@@ -14,6 +14,18 @@ work of the next query batch with the device-side search of the current one.
   * **Rolling stats.** Per-row latency (enqueue -> results ready), rolling
     QPS with compile time separated out (steady-state QPS is what the paper
     reports), and recall@k whenever ground truth was submitted.
+  * **Cross-batch result cache.** With `result_cache_size > 0`, an LRU cache
+    keyed on the exact query bytes serves repeat queries without touching
+    the executor at all (paper §6 serves stateless batches; repeat traffic
+    is the obvious serving win). Hits return bit-identical ids/dists -- the
+    cache stores the executor's own outputs -- and are reported in
+    `ServeStats.result_cache_hits`/`result_cache_hit_rate`.
+  * **Host-I/O lifecycle.** When the executor serves its graph through the
+    async host-I/O subsystem (`repro.runtime.hostio`), the pipeline owns the
+    service: worker pools start at pipeline construction, `close()` (or the
+    context manager) stops them, and each drain's `ServeStats.hostio`
+    carries the service's counter snapshot (queue depth, latency, cache hit
+    rate, prefetch `overlap_fraction`).
 
 The pipeline is executor-agnostic: any object with the `SearchExecutor`
 dispatch/finish contract works, including `ShardedSearchExecutor` — then
@@ -32,7 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
+from collections import OrderedDict, deque
 from typing import Callable
 
 import numpy as np
@@ -64,10 +76,14 @@ class ServeStats:
     queries: int
     wall_s: float           # first dispatch -> last batch ready (incl. compile)
     compile_s: float        # total compile time paid inside the window
-    qps: float              # steady-state: queries / (wall_s - compile_s)
+    qps: float              # steady-state: queries / (wall_s - compile_s);
+                            # result-cache hits count as served queries
     p50_ms: float           # per-row latency percentiles (enqueue -> ready)
     p95_ms: float
     mean_recall: float | None  # mean recall@k over batches with ground truth
+    result_cache_hits: int = 0      # rows served from the query-result LRU
+    result_cache_hit_rate: float = 0.0  # hits / queries in this window
+    hostio: dict | None = None  # NeighborService counter snapshot, if any
 
 
 class ServePipeline:
@@ -87,9 +103,12 @@ class ServePipeline:
         rerank: bool = True,
         max_batch: int = 128,
         kernel_mode: str | None = None,
+        result_cache_size: int = 0,
     ) -> None:
         if max_batch <= 0:
             raise ValueError("max_batch must be positive")
+        if result_cache_size < 0:
+            raise ValueError("result_cache_size must be >= 0")
         self._ex = executor
         self._k = k
         self._cfg = cfg or SearchConfig(t=max(t, k))
@@ -101,11 +120,40 @@ class ServePipeline:
         self._max_batch = max_batch
         # queue rows: (query row (d,), enqueue timestamp, gt row or None)
         self._queue: deque = deque()
+        # Cross-batch query-result LRU: exact query bytes -> (ids, dists)
+        # rows, exactly as the executor returned them (bit-identical hits).
+        self._result_cache_size = result_cache_size
+        self._result_cache: OrderedDict[bytes, tuple[np.ndarray, np.ndarray]]
+        self._result_cache = OrderedDict()
         self.last_stats: ServeStats | None = None
+        # The pipeline owns the executor's host-I/O service lifecycle: spin
+        # the worker pools up front so the first drain doesn't pay thread
+        # creation, and stop them in close().
+        rt = getattr(executor, "hostio_runtime", None)
+        if rt is not None:
+            rt.start()
 
     @property
     def executor(self) -> SearchExecutor:
         return self._ex
+
+    @property
+    def result_cache_len(self) -> int:
+        """Current number of cached query results (capacity is the
+        `result_cache_size` constructor parameter)."""
+        return len(self._result_cache)
+
+    def close(self) -> None:
+        """Stop the executor's host-I/O worker pools (idempotent)."""
+        rt = getattr(self._ex, "hostio_runtime", None)
+        if rt is not None:
+            rt.stop()
+
+    def __enter__(self) -> "ServePipeline":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def pending(self) -> int:
         return len(self._queue)
@@ -123,6 +171,25 @@ class ServePipeline:
             self._queue.append((row, now, None if gt is None else gt[i]))
         return q.shape[0]
 
+    # ------------------------------------------------------- result cache
+    def _cache_lookup(self, row: np.ndarray):
+        """LRU hit for one query row (exact byte match), or None."""
+        if self._result_cache_size == 0:
+            return None
+        hit = self._result_cache.get(row.tobytes())
+        if hit is not None:
+            self._result_cache.move_to_end(row.tobytes())
+        return hit
+
+    def _cache_insert(self, queries: np.ndarray, ids, dists) -> None:
+        if self._result_cache_size == 0:
+            return
+        for q_row, i_row, d_row in zip(queries, np.asarray(ids), np.asarray(dists)):
+            self._result_cache[q_row.tobytes()] = (i_row.copy(), d_row.copy())
+            self._result_cache.move_to_end(q_row.tobytes())
+        while len(self._result_cache) > self._result_cache_size:
+            self._result_cache.popitem(last=False)
+
     def drain(
         self, on_batch: Callable[[BatchReport], None] | None = None
     ) -> tuple[np.ndarray, np.ndarray, ServeStats]:
@@ -135,35 +202,62 @@ class ServePipeline:
         recalls: list[float] = []
         batches = 0
         compile_s = 0.0
+        cache_hits = 0
         t_start = time.perf_counter()
 
-        inflight: tuple[list, SearchHandle, int, float] | None = None
-        pos = 0
-        while self._queue or inflight is not None:
+        # Result-cache pre-pass: rows seen in an earlier drain are answered
+        # straight from the LRU and never reach the executor; the remaining
+        # misses keep their original submission positions.
+        misses: deque = deque()
+        hit_gt_ids: list[np.ndarray] = []
+        hit_gt_true: list[np.ndarray] = []
+        for at, (row, t_enq, gt) in enumerate(self._queue):
+            cached = self._cache_lookup(row)
+            if cached is None:
+                misses.append((at, (row, t_enq, gt)))
+                continue
+            ids_out[at], dists_out[at] = cached
+            cache_hits += 1
+            latencies.append((time.perf_counter() - t_enq) * 1e3)
+            if gt is not None:
+                hit_gt_ids.append(ids_out[at])
+                hit_gt_true.append(gt)
+        self._queue.clear()
+        if hit_gt_ids:
+            kk = min(k, min(len(g) for g in hit_gt_true))
+            recalls.append(recall_at_k(
+                np.stack(hit_gt_ids)[:, :kk],
+                np.stack([g[:kk] for g in hit_gt_true]),
+            ))
+
+        inflight: tuple[list, list, SearchHandle, float] | None = None
+        while misses or inflight is not None:
             nxt = None
-            if self._queue:
+            if misses:
                 # Host-side work for the next batch (pop, stack, pad, upload,
                 # async dispatch) happens while the previous batch computes.
-                rows = [
-                    self._queue.popleft()
-                    for _ in range(min(self._max_batch, len(self._queue)))
+                popped = [
+                    misses.popleft()
+                    for _ in range(min(self._max_batch, len(misses)))
                 ]
+                at_idx = [p[0] for p in popped]
+                rows = [p[1] for p in popped]
                 queries = np.stack([r[0] for r in rows])
                 t_disp = time.perf_counter()
                 handle = self._ex.dispatch(
                     queries, k, cfg=self._cfg, rerank=self._rerank
                 )
-                nxt = (rows, handle, pos, t_disp)
-                pos += len(rows)
+                nxt = (rows, at_idx, handle, t_disp)
 
             if inflight is not None:
-                rows, handle, at, t_disp = inflight
+                rows, at_idx, handle, t_disp = inflight
                 ids, dists = self._ex.finish(handle)
                 ready = time.perf_counter()
                 ids = np.asarray(ids)
                 dists = np.asarray(dists)
-                ids_out[at : at + len(rows)] = ids
-                dists_out[at : at + len(rows)] = dists
+                ids_out[at_idx] = ids
+                dists_out[at_idx] = dists
+                self._cache_insert(np.stack([r[0] for r in rows]), ids, dists)
                 latencies.extend((ready - r[1]) * 1e3 for r in rows)
                 compile_s += handle.compile_s
                 # Score whichever rows carry ground truth (a micro-batch may
@@ -192,6 +286,7 @@ class ServePipeline:
 
         wall = time.perf_counter() - t_start
         steady = max(wall - compile_s, 1e-9)
+        rt = getattr(self._ex, "hostio_runtime", None)
         stats = ServeStats(
             batches=batches,
             queries=n,
@@ -201,6 +296,9 @@ class ServePipeline:
             p50_ms=float(np.percentile(latencies, 50)) if latencies else 0.0,
             p95_ms=float(np.percentile(latencies, 95)) if latencies else 0.0,
             mean_recall=float(np.mean(recalls)) if recalls else None,
+            result_cache_hits=cache_hits,
+            result_cache_hit_rate=cache_hits / n if n else 0.0,
+            hostio=None if rt is None else rt.stats(),
         )
         self.last_stats = stats
         return ids_out, dists_out, stats

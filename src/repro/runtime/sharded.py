@@ -75,6 +75,7 @@ from repro.core.search import SearchConfig
 from repro.core.vamana import VamanaGraph
 
 from .executor import SearchExecutor, bucket_size
+from .hostio import HostIOConfig, HostIORuntime
 
 Array = jax.Array
 
@@ -96,6 +97,7 @@ class ShardedSearchExecutor(SearchExecutor):
         data_axis: str = "data",
         model_axis: str = "model",
         min_bucket: int = 8,
+        hostio: HostIOConfig | None = None,
     ) -> None:
         if variant not in SHARDED_VARIANTS:
             raise ValueError(
@@ -109,6 +111,11 @@ class ShardedSearchExecutor(SearchExecutor):
             )
         if data is None:
             raise ValueError("sharded executor needs full vectors (re-rank source)")
+        if hostio is not None and variant != "sharded-base":
+            raise ValueError(
+                "hostio= only applies to the host-resident-graph variant "
+                f"'sharded-base', got {variant!r}"
+            )
         # Deliberately not super().__init__: the parent constructor places
         # single-device state (and rejects the sharded variants); the serving
         # bookkeeping the shared dispatch/finish path relies on comes from
@@ -118,6 +125,9 @@ class ShardedSearchExecutor(SearchExecutor):
         self._data_axis = data_axis
         self._model_axis = model_axis
         self._graph = graph
+        self._hostio = hostio
+        self.hostio_runtime = None
+        self._exchange = (None, None)
         self._init_serving_state(min_bucket)
 
         S = mesh.shape[model_axis]
@@ -135,13 +145,22 @@ class ShardedSearchExecutor(SearchExecutor):
             # Sharded BANG Base: the graph never touches device memory. Each
             # model shard's contiguous row block is pinned in host RAM and
             # served through that shard's pure_callback; per hop the host
-            # link carries frontier ids out and adjacency rows back.
+            # link carries frontier ids out and adjacency rows back. With a
+            # HostIOConfig the per-shard callbacks go through the async
+            # host-I/O subsystem (worker pool per partition, device-resident
+            # hot cache, prefetched frontier exchange) -- bit-exact either way.
             n_loc = adjacency.shape[0] // S
             self._adjacency = None
             self._host_partitions = [
                 np.ascontiguousarray(adjacency[s * n_loc : (s + 1) * n_loc])
                 for s in range(S)
             ]
+            if hostio is not None:
+                self.hostio_runtime = HostIORuntime(
+                    hostio, self._host_partitions, adjacency,
+                    medoid=graph.medoid, name="hostio-shard",
+                )
+                self._exchange = self.hostio_runtime.shard_exchange(model_axis)
         else:
             self._adjacency = jax.device_put(adjacency, model_spec)
             self._host_partitions = None
@@ -167,10 +186,15 @@ class ShardedSearchExecutor(SearchExecutor):
         daxis, maxis = self._data_axis, self._model_axis
         medoid = self._graph.medoid
         host_graph = self.variant == "sharded-base"
-        neighbor_fn = (
-            host_shard_neighbor_fn(self._host_partitions, maxis)
-            if host_graph else None
-        )
+        prefetch_fn = None
+        if host_graph and self.hostio_runtime is not None:
+            # Async host-I/O subsystem: per-shard multi-worker gathers, hot
+            # cache, optional prefetched (double-buffered) exchange.
+            neighbor_fn, prefetch_fn = self._exchange
+        elif host_graph:
+            neighbor_fn = host_shard_neighbor_fn(self._host_partitions, maxis)
+        else:
+            neighbor_fn = None
 
         def pipeline(queries, codebooks, codes, adjacency, data):
             # Trace-time side effect: runs once per compiled executable.
@@ -179,6 +203,7 @@ class ShardedSearchExecutor(SearchExecutor):
             return sharded_bang_search_block(
                 queries, table, codes, adjacency, data,
                 medoid, k, cfg, maxis, rerank=rerank, neighbor_fn=neighbor_fn,
+                prefetch_fn=prefetch_fn,
             )
 
         # The base mode's executable takes no adjacency operand at all: the
@@ -249,7 +274,10 @@ class ShardedSearchExecutor(SearchExecutor):
         pays the paper's PCIe traffic per hop -- (B_loc,) int32 frontier ids
         out to its host partition (`host_ids_out_bytes`) and (B_loc, R)
         int32 adjacency rows back (`host_rows_in_bytes`); their sum is
-        `host_link_bytes`, 0 when the graph is device-resident.
+        `host_link_bytes`, 0 when the graph is device-resident. With the
+        hostio hot cache, `host_bytes_saved_per_hop` (measured hit rate x
+        the rows-back leg) is subtracted: hit rows are served from the
+        replicated device cache and never cross any shard's host link.
         """
         bucket = self._bucket_for(batch)
         b_loc = bucket // self.n_data_shards
@@ -258,13 +286,17 @@ class ShardedSearchExecutor(SearchExecutor):
         ring = int(2 * (S - 1) / S * payload) if S > 1 else 0
         host_ids_out = b_loc * 4 if self.variant == "sharded-base" else 0
         host_rows_in = b_loc * self.R * 4 if self.variant == "sharded-base" else 0
+        hot = self._hot_cache_fields(host_rows_in)
         return {
             "payload_bytes": payload,
             "collective_bytes": payload,
             "ring_bytes_per_device": ring,
             "host_ids_out_bytes": host_ids_out,
             "host_rows_in_bytes": host_rows_in,
-            "host_link_bytes": host_ids_out + host_rows_in,
+            "host_link_bytes": (
+                host_ids_out + host_rows_in - hot["host_bytes_saved_per_hop"]
+            ),
             "model_shards": S,
             "data_shards": self.n_data_shards,
+            **hot,
         }

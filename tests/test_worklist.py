@@ -81,3 +81,92 @@ def test_sort_candidates_matches_numpy(vals):
     i = jnp.asarray([list(range(len(vals)))], jnp.int32)
     sd, si = sort_candidates(d, i)
     np.testing.assert_allclose(np.asarray(sd[0]), np.sort(np.asarray(vals, np.float32)))
+
+
+# --------------------------------------------------------------- edge cases
+@settings(max_examples=25, deadline=None)
+@given(st.lists(finite_f32, min_size=4, max_size=24), st.data())
+def test_merge_into_saturated_worklist_keeps_t_best(vals, data):
+    """A saturated worklist (every slot finite, no padding) must evict
+    exactly the worst entries when better candidates arrive, and stay
+    sorted with untouched-entry flags preserved."""
+    t = data.draw(st.integers(2, max(2, len(vals) // 2)))
+    wl_d = sorted(vals[:t])
+    cand = sorted(vals[t:]) or [1e9]
+    wl = Worklist(
+        dists=jnp.asarray([wl_d], jnp.float32),
+        ids=jnp.asarray([list(range(t))], jnp.int32),
+        visited=jnp.asarray([[i % 2 == 0 for i in range(t)]]),
+    )
+    out = merge_worklist(
+        wl,
+        jnp.asarray([cand], jnp.float32),
+        jnp.asarray([[1000 + i for i in range(len(cand))]], jnp.int32),
+    )
+    expect = sorted(wl_d + cand)[:t]
+    np.testing.assert_allclose(np.asarray(out.dists[0]), expect, rtol=1e-6)
+    got = np.asarray(out.dists[0])
+    assert (got[:-1] <= got[1:]).all(), "worklist must stay sorted"
+    # Survivor slots that came from the worklist keep their visited flag;
+    # freshly merged candidates always enter unvisited.
+    for pos, nid in enumerate(np.asarray(out.ids[0]).tolist()):
+        if nid >= 1000:
+            assert not bool(out.visited[0, pos])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(finite_f32, min_size=1, max_size=16), st.data())
+def test_merge_duplicate_inserts_stay_sorted_and_bounded(vals, data):
+    """Duplicate candidate ids (the bloom filter normally guarantees none,
+    but the worklist must not corrupt if they appear): the merge keeps the
+    t smallest of the multiset union, sorted, length exactly t."""
+    t = data.draw(st.integers(1, len(vals)))
+    wl_d = sorted(vals)[:t]
+    wl = Worklist(
+        dists=jnp.asarray([wl_d], jnp.float32),
+        ids=jnp.asarray([list(range(t))], jnp.int32),
+        visited=jnp.zeros((1, t), bool),
+    )
+    dup = [vals[0]] * data.draw(st.integers(1, 6))   # same dist, same id
+    cd = jnp.asarray([sorted(dup)], jnp.float32)
+    ci = jnp.full((1, len(dup)), 777, jnp.int32)
+    out = merge_worklist(wl, cd, ci)
+    assert out.dists.shape == (1, t)
+    expect = sorted(wl_d + dup)[:t]
+    np.testing.assert_allclose(np.asarray(out.dists[0]), expect, rtol=1e-6)
+    got = np.asarray(out.dists[0])
+    assert (got[:-1] <= got[1:]).all()
+
+
+def test_all_visited_frontier_reports_no_candidate():
+    """When every slot is visited (the convergence condition of Algorithm 2)
+    first_unvisited must report found=False with the INVALID sentinel for
+    every lane -- including a fully padded (fresh) worklist."""
+    wl = Worklist(
+        dists=jnp.asarray([[0.1, 0.2, 0.3]], jnp.float32),
+        ids=jnp.asarray([[4, 5, 6]], jnp.int32),
+        visited=jnp.ones((1, 3), bool),
+    )
+    ids, found = first_unvisited(wl)
+    assert not bool(found[0]) and ids[0] == INVALID_ID
+    fresh = worklist_init(2, 4)         # padding slots are born visited
+    ids, found = first_unvisited(fresh)
+    assert not np.asarray(found).any()
+    assert (np.asarray(ids) == int(INVALID_ID)).all()
+
+
+def test_mark_visited_with_sentinel_is_noop_on_real_entries():
+    """Converged lanes mark INVALID_ID: only padding slots (which are
+    already visited) may match, so real entries never flip."""
+    wl = Worklist(
+        dists=jnp.asarray([[0.1, 0.2, np.inf]], jnp.float32),
+        ids=jnp.asarray([[4, 5, INVALID_ID]], jnp.int32),
+        visited=jnp.asarray([[False, False, True]]),
+    )
+    out = mark_visited(wl, jnp.asarray([INVALID_ID], jnp.int32))
+    np.testing.assert_array_equal(
+        np.asarray(out.visited), np.asarray(wl.visited)
+    )
+    # And marking a real id flips exactly that slot.
+    out2 = mark_visited(wl, jnp.asarray([5], jnp.int32))
+    assert bool(out2.visited[0, 1]) and not bool(out2.visited[0, 0])
