@@ -1,0 +1,170 @@
+"""Streaming-mutability bench: mixed mutate+search workload + consolidation.
+
+BANG (§6) reports QPS on a frozen index; this suite measures what the
+streaming layer (`repro.runtime.mutation`) costs when the corpus mutates
+under load, emitting one `ROWJSON,<MUTATION_ROW_SCHEMA>` record per phase:
+
+  * **steady_mixed** -- rounds of (delete a few, insert a few, drain a
+    query batch) through `ServePipeline`: steady-state QPS with the
+    tombstone operand + delta fusion on the hot path, and recall against
+    the *live* corpus (brute force over non-tombstoned base + alive delta).
+  * **mid_consolidation** -- the same serving loop raced against
+    `consolidate_async()`: the row's recall is the FLOOR over every drain
+    that overlapped the background fold (the acceptance criterion: the
+    floor holds mid-consolidation).
+  * **post_consolidation** -- after the generation swap: the delta is
+    folded, tombstoned slots are retired, and QPS returns to the frozen
+    shape (fresh executables, so `compile_s` is the swap's one-time cost).
+
+CPU-host numbers are relative, as everywhere in benchmarks/: the measured
+object is the shape -- mutate-under-load QPS vs frozen QPS, the recall
+floor, the consolidation counters -- not absolute throughput.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.core import SearchConfig, brute_force_knn, recall_at_k
+from repro.runtime import MutableBangIndex, ServePipeline
+
+from .common import bench_dataset
+
+K = 10
+MUT_T = 48
+MUT_BATCH = 64
+ROUNDS = 4
+DELETES_PER_ROUND = 8
+INSERTS_PER_ROUND = 8
+
+# The JSON schema of one mutation-bench row (tests/test_mutation.py pins it).
+MUTATION_ROW_SCHEMA = frozenset({
+    "name", "phase", "variant", "us_per_query", "qps", "recall",
+    "epoch", "generation", "consolidations",
+    "tombstones", "tombstone_fraction", "delta_points", "delta_total",
+    "base_n", "compile_s",
+})
+
+
+def mutation_row(
+    *, name: str, phase: str, variant: str, recall: float, qps: float,
+    us_per_query: float, compile_s: float, stats: dict,
+) -> dict:
+    """One mutation-bench record conforming to MUTATION_ROW_SCHEMA."""
+    return {
+        "name": name,
+        "phase": phase,
+        "variant": variant,
+        "us_per_query": round(us_per_query, 1),
+        "qps": round(qps, 1),
+        "recall": round(recall, 4),
+        "epoch": stats["epoch"],
+        "generation": stats["generation"],
+        "consolidations": stats["consolidations"],
+        "tombstones": stats["tombstones"],
+        "tombstone_fraction": round(stats["tombstone_fraction"], 5),
+        "delta_points": stats["delta_points"],
+        "delta_total": stats["delta_total"],
+        "base_n": stats["base_n"],
+        "compile_s": round(compile_s, 2),
+    }
+
+
+def _row_derived(row: dict) -> str:
+    return (
+        f"phase={row['phase']},qps={row['qps']:.0f},"
+        f"recall={row['recall']:.3f},tomb={row['tombstones']},"
+        f"delta={row['delta_points']},gen={row['generation']},"
+        f"compile_s={row['compile_s']:.2f}"
+    )
+
+
+def _live_gt(mut: MutableBangIndex, queries: np.ndarray, k: int) -> np.ndarray:
+    gids, vecs = mut.live_points()
+    return gids[brute_force_knn(vecs, queries, k)]
+
+
+def _drain(pipe, q, gt_fn):
+    pipe.submit(q)
+    ids, _, stats = pipe.drain()
+    return recall_at_k(ids, gt_fn()), stats
+
+
+def run(report) -> None:
+    data, queries, idx = bench_dataset(n=4000, d=32, n_clusters=48, seed=2)
+    q = np.asarray(queries[:MUT_BATCH], np.float32)
+    cfg = SearchConfig(t=MUT_T, bloom_z=16384)
+    rng = np.random.default_rng(0)
+
+    mut = MutableBangIndex(idx)
+    pipe = ServePipeline(mut.executor("inmem"), k=K, cfg=cfg,
+                         max_batch=MUT_BATCH)
+    medoid = int(idx.graph.medoid)
+    try:
+        # Warm-up drain pays the compile; steady rounds must not retrace.
+        _, warm = _drain(pipe, q, lambda: _live_gt(mut, q, K))
+
+        # ---- phase 1: steady-state mixed mutate+search --------------------
+        best_qps, best_wall, worst_recall = 0.0, float("inf"), 1.0
+        for _ in range(ROUNDS):
+            live, _ = mut.live_points()
+            victims = [int(v) for v in rng.choice(live, DELETES_PER_ROUND,
+                                                  replace=False)
+                       if int(v) != medoid]
+            mut.delete(victims)
+            mut.insert(data[rng.integers(len(data), size=INSERTS_PER_ROUND)]
+                       + rng.normal(0, 0.02, (INSERTS_PER_ROUND,
+                                              data.shape[1])).astype(np.float32))
+            rec, stats = _drain(pipe, q, lambda: _live_gt(mut, q, K))
+            worst_recall = min(worst_recall, rec)
+            best_qps = max(best_qps, stats.qps)
+            best_wall = min(best_wall, stats.wall_s)
+        row = mutation_row(
+            name="mutation_steady_mixed", phase="steady_mixed",
+            variant="inmem", recall=worst_recall, qps=best_qps,
+            us_per_query=best_wall / len(q) * 1e6,
+            compile_s=warm.compile_s, stats=mut.mutation_stats(),
+        )
+        print(f"ROWJSON,{json.dumps(row)}", flush=True)
+        report(row["name"], row["us_per_query"], _row_derived(row))
+
+        # ---- phase 2: serve while consolidating ---------------------------
+        gt = _live_gt(mut, q, K)   # live set is frozen during the fold
+        th = mut.consolidate_async()
+        floor, drains, best_qps, best_wall = 1.0, 0, 0.0, float("inf")
+        while True:
+            alive = th.is_alive()
+            rec, stats = _drain(pipe, q, lambda: gt)
+            floor = min(floor, rec)
+            drains += 1
+            best_qps = max(best_qps, stats.qps)
+            best_wall = min(best_wall, stats.wall_s)
+            if not alive:
+                break
+        th.join()
+        if mut.consolidate_error is not None:
+            raise mut.consolidate_error
+        row = mutation_row(
+            name="mutation_mid_consolidation", phase="mid_consolidation",
+            variant="inmem", recall=floor, qps=best_qps,
+            us_per_query=best_wall / len(q) * 1e6, compile_s=0.0,
+            stats=mut.mutation_stats(),
+        )
+        print(f"ROWJSON,{json.dumps(row)}", flush=True)
+        report(row["name"], row["us_per_query"],
+               _row_derived(row) + f",drains={drains}")
+
+        # ---- phase 3: post-swap steady state ------------------------------
+        rec, stats = _drain(pipe, q, lambda: _live_gt(mut, q, K))
+        row = mutation_row(
+            name="mutation_post_consolidation", phase="post_consolidation",
+            variant="inmem", recall=rec, qps=stats.qps,
+            us_per_query=stats.wall_s / len(q) * 1e6,
+            compile_s=stats.compile_s, stats=mut.mutation_stats(),
+        )
+        print(f"ROWJSON,{json.dumps(row)}", flush=True)
+        report(row["name"], row["us_per_query"], _row_derived(row))
+    finally:
+        pipe.close()
+        mut.close()

@@ -24,6 +24,7 @@ def main() -> None:
         bench_hostio,
         bench_iterations,
         bench_kernels,
+        bench_mutation,
         bench_qps_recall,
         bench_variants,
     )
@@ -35,6 +36,7 @@ def main() -> None:
         ("iterations", bench_iterations),
         ("kernels", bench_kernels),         # incl. the in-executor kernel lane
         ("hostio", bench_hostio),           # host-I/O subsystem sweep
+        ("mutation", bench_mutation),       # streaming insert/delete serving
         ("ablations", bench_ablations),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None

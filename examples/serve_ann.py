@@ -25,7 +25,10 @@ link; the server prints the measured hit rate and bytes saved), and
 `--prefetch` double-buffers the frontier exchange (hop k+1's expected gather
 issued while the device merges hop k; the server prints the measured overlap
 fraction). `--result-cache N` enables the ServePipeline cross-batch
-query-result LRU (any variant). On a CPU host `--devices N` forces N fake
+query-result LRU (any variant). `--mutate` interleaves live inserts/deletes
+with the serving batches through a `MutableBangIndex` (plus a background
+consolidation halfway through), scoring recall against the live corpus.
+On a CPU host `--devices N` forces N fake
 devices (set before any other use of jax in the process, which this
 entrypoint guarantees by setting XLA_FLAGS first). See `--help` for the
 variant x placement, kernel-mode and host-I/O matrices.
@@ -88,6 +91,31 @@ combination is bit-exact vs the inline-callback path in every kernel mode):
     --result-cache N   ServePipeline cross-batch query-result LRU (any
                        variant): repeat queries served bit-identically
                        without touching the executor
+
+streaming mutability (--mutate, repro.runtime.mutation): the server wraps
+the index in a MutableBangIndex and interleaves inserts/deletes with the
+serving batches, then consolidates in the background while traffic flows.
+Cache-invalidation contract (what --mutate demonstrates):
+
+    cache                    scope     invalidated by
+    -----------------------  --------  --------------------------------
+    ServePipeline result     epoch     every insert()/delete()/
+    LRU (--result-cache)               consolidate() bumps the epoch;
+                                       the next drain drops the LRU, so
+                                       a hit can never return a deleted
+                                       id or miss a fresh insert
+    compiled executables     gen       consolidation bumps the
+    (per-bucket jit cache)             generation; executors rebuild
+                                       from the new snapshot, old
+                                       executables are dropped
+    hostio hot-adjacency     gen       retiring caches are refresh()ed
+    cache (--hot-cache-rows)           with the consolidated rows
+
+Consolidation guarantees: deleted ids never come back (slots are retired,
+ids never reused); inserted ids are stable across the fold (delta ids are
+base_n + ordinal); searches racing the background fold stay correct -- the
+tombstone bitmap and the exact delta scan cover the gap until the atomic
+generation swap.
 """
 
 
@@ -128,6 +156,12 @@ def main() -> None:
     ap.add_argument("--result-cache", type=int, default=0,
                     help="ServePipeline cross-batch query-result LRU size "
                          "(0 = off)")
+    ap.add_argument("--mutate", action="store_true",
+                    help="wrap the index in a MutableBangIndex and "
+                         "interleave inserts/deletes with the serving "
+                         "batches, consolidating in the background "
+                         "(recall is scored against the live corpus; see "
+                         "the mutability section below)")
     args = ap.parse_args()
 
     if args.devices > 0:
@@ -167,7 +201,14 @@ def main() -> None:
         raise SystemExit("--hot-cache-rows/--prefetch need --host-workers >= 1")
 
     # sharded -> default all-device mesh
-    executor = index.executor(args.variant, hostio=hostio)
+    mut = None
+    if args.mutate:
+        from repro.runtime import MutableBangIndex
+
+        mut = MutableBangIndex(index)
+        executor = mut.executor(args.variant, hostio=hostio)
+    else:
+        executor = index.executor(args.variant, hostio=hostio)
     x = executor.exchange_bytes_per_hop(args.max_batch)
     if args.variant.startswith("sharded"):
         print(
@@ -210,10 +251,6 @@ def main() -> None:
         executor, k=args.k, cfg=cfg, max_batch=args.max_batch,
         kernel_mode=args.kernel_mode, result_cache_size=args.result_cache,
     )
-    for b in range(args.batches):
-        queries = uniform_queries(data, args.batch_size, seed=100 + b)
-        gt = brute_force_knn(data, queries, args.k)
-        pipe.submit(queries, gt_ids=gt)
 
     def on_batch(rep) -> None:
         compile_note = f", compile {rep.compile_s:.1f}s" if rep.compile_s else ""
@@ -224,11 +261,48 @@ def main() -> None:
             f"{compile_note}){recall}"
         )
 
-    _, _, stats = pipe.drain(on_batch=on_batch)
+    if mut is None:
+        for b in range(args.batches):
+            queries = uniform_queries(data, args.batch_size, seed=100 + b)
+            gt = brute_force_knn(data, queries, args.k)
+            pipe.submit(queries, gt_ids=gt)
+        _, _, stats = pipe.drain(on_batch=on_batch)
+        total_queries = stats.queries
+    else:
+        # Mutate-under-load demo: each serving batch is preceded by a few
+        # deletes + inserts (recall scored against the live corpus), with a
+        # background consolidation kicked off halfway through.
+        import numpy as np
+
+        rng = np.random.default_rng(0)
+        medoid = int(index.graph.medoid)
+        consolidation = None
+        total_queries = 0
+        for b in range(args.batches):
+            live_ids, _ = mut.live_points()
+            mut.delete([int(v) for v in rng.choice(live_ids, 4, replace=False)
+                        if int(v) != medoid])
+            fresh = data[rng.integers(len(data), size=4)]
+            fresh = fresh + rng.normal(0, 0.02, fresh.shape).astype(np.float32)
+            mut.insert(fresh)
+            if b == args.batches // 2:
+                consolidation = mut.consolidate_async()
+                print("[serve] background consolidation started")
+            queries = uniform_queries(data, args.batch_size, seed=100 + b)
+            live_ids, live_vecs = mut.live_points()
+            gt = live_ids[np.asarray(brute_force_knn(live_vecs, queries,
+                                                     args.k))]
+            pipe.submit(queries, gt_ids=gt)
+            _, _, stats = pipe.drain(on_batch=on_batch)
+            total_queries += stats.queries
+        if consolidation is not None:
+            consolidation.join()
+            if mut.consolidate_error is not None:
+                raise mut.consolidate_error
     recall = ("n/a" if stats.mean_recall is None
               else f"{stats.mean_recall:.3f}")
     print(
-        f"[serve] TOTAL {stats.queries} queries | steady-state "
+        f"[serve] TOTAL {total_queries} queries | steady-state "
         f"{stats.qps:.0f} QPS (compile {stats.compile_s:.1f}s excluded)"
     )
     print(
@@ -253,7 +327,18 @@ def main() -> None:
             f"prefetch overlap {h['overlap_fraction']:.1%} "
             f"({h['prefetch_hits']} hits, {h['prefetch_misses']} misses)"
         )
+    if mut is not None and stats.mutation is not None:
+        ms = stats.mutation
+        print(
+            f"[serve] mutation: epoch {ms['epoch']}, generation "
+            f"{ms['generation']} ({ms['consolidations']} consolidation(s)), "
+            f"{ms['tombstones']} tombstones "
+            f"({ms['tombstone_fraction']:.2%}), {ms['delta_points']} live "
+            f"delta points, base_n={ms['base_n']}"
+        )
     pipe.close()
+    if mut is not None:
+        mut.close()
 
 
 if __name__ == "__main__":

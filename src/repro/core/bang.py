@@ -53,6 +53,29 @@ above and bit-exact in every cell x kernel mode:
                              §4.6 eager candidate gather is issued while
                              the device merges hop k (measured
                              overlap_fraction)
+
+Mutability semantics (`repro.runtime.mutation.MutableBangIndex`): a
+`BangIndex` itself is immutable -- every executor closes over a frozen
+snapshot. Streaming inserts/deletes layer on top of it:
+
+  * deletes tombstone ids in a bitmap that rides every dispatch as an
+    executable *operand*; a tombstoned id scores +inf in the §4.6 selection
+    and can never enter 𝓛, the re-rank history, or the top-k, in any
+    variant or kernel_mode;
+  * inserts accumulate in a small delta set, searched exactly and fused
+    into the main results with `worklist.merge_worklist` (PQ variants must
+    `rerank=True` while delta points are live -- fusion needs exact-space
+    distances);
+  * `consolidate()` folds both back into a *new* BangIndex (robust_prune
+    re-linking around deleted nodes, build-rule insertion of delta points)
+    and swaps it in as a new generation.
+
+Cache-invalidation contract: every mutation bumps the executor-visible
+`mutation_epoch`, which scopes the `ServePipeline` query-result LRU (stale
+hits are impossible -- the next drain drops the cache); consolidation bumps
+`generation`, which keys the compiled-executable cache (old executables are
+dropped, never served) and `refresh()`es retiring hostio hot-adjacency
+caches so pinned rows always mirror the host partitions.
 """
 from __future__ import annotations
 

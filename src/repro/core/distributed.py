@@ -218,6 +218,7 @@ def sharded_bang_search_block(
     rerank: bool = True,
     neighbor_fn: Callable | None = None,
     prefetch_fn: Callable | None = None,
+    tombstone_fn: Callable | None = None,
 ) -> tuple[Array, Array, Array, Array]:
     """The per-shard body: full BANG pipeline on sharded state.
 
@@ -229,6 +230,12 @@ def sharded_bang_search_block(
     `repro.runtime.hostio.make_shard_exchange` pair, whose `prefetch_fn`
     double-buffers each shard's host gather behind the device merge. PQ
     codes and re-rank vectors are device-sharded either way.
+
+    `tombstone_fn` (streaming mutability) masks deleted ids out of each
+    hop's validity mask before the StepFn -- the bitmap it closes over is
+    *replicated* per shard (n bytes, R·4x smaller than the graph it guards),
+    so every model shard of a data group applies the identical mask and the
+    replicated-worklist invariant is preserved.
 
     Returns (ids (B_loc, k), dists (B_loc, k), n_hops (B_loc,),
     n_iters (B_loc,)) -- all replicated over `axis` (the worklist/bloom state
@@ -253,6 +260,7 @@ def sharded_bang_search_block(
         n_points=codes_local.shape[0],  # local; only used for sizing hints
         cfg=cfg,
         prefetch_fn=prefetch_fn,
+        tombstone_fn=tombstone_fn,
     )
     if rerank:
         # Re-rank (§4.9) stays sharded: each shard scores only the expanded

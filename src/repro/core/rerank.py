@@ -23,16 +23,46 @@ from .worklist import INVALID_ID
 Array = jax.Array
 
 
-def gather_host_vectors(data_np: np.ndarray, ids: Array) -> Array:
-    """Host-side candidate-vector service (BANG Base link traffic)."""
+# Per-callback result budget for the host gather, in bytes. XLA:CPU farms any
+# op touching >=128 KiB out to its intra-op threadpool; on a low-core host the
+# pool's only thread can be the one parked inside the host callback, so a
+# callback result that large, consumed by a parallelised kernel, deadlocks the
+# runtime. Half the threshold keeps every chunk (and its consumer) inline.
+_GATHER_CHUNK_BYTES = 64 * 1024
+
+
+def gather_host_vectors(
+    data_np: np.ndarray, ids: Array, *, chunk_rows: int | None = None
+) -> Array:
+    """Host-side candidate-vector service (BANG Base link traffic).
+
+    The gather is issued as a sequence of bounded-size pure_callbacks rather
+    than one bulk transfer, mirroring the paper's batched candidate shipping
+    (§4.9) and keeping each result under XLA:CPU's parallel-consumer
+    threshold (see _GATHER_CHUNK_BYTES).
+    """
     d = data_np.shape[1]
 
     def host_gather(idx: np.ndarray) -> np.ndarray:
         safe = np.where(idx == np.int32(2**31 - 1), 0, idx)
         return np.ascontiguousarray(data_np[safe], dtype=np.float32)
 
-    shape = jax.ShapeDtypeStruct((*ids.shape, d), jnp.float32)
-    return pure_callback(host_gather, shape, ids)
+    if chunk_rows is None:
+        chunk_rows = max(1, _GATHER_CHUNK_BYTES // (d * 4))
+    flat = ids.reshape(-1)
+    total = flat.shape[0]
+    if total <= chunk_rows:
+        shape = jax.ShapeDtypeStruct((*ids.shape, d), jnp.float32)
+        return pure_callback(host_gather, shape, ids)
+    pieces = [
+        pure_callback(
+            host_gather,
+            jax.ShapeDtypeStruct((min(chunk_rows, total - s), d), jnp.float32),
+            flat[s : s + chunk_rows],
+        )
+        for s in range(0, total, chunk_rows)
+    ]
+    return jnp.concatenate(pieces, 0).reshape(*ids.shape, d)
 
 
 def exact_topk(
@@ -76,11 +106,11 @@ def rerank(
     data: Array | None = None,
     data_np: np.ndarray | None = None,
     use_kernels: bool = False,
-    chunk: int = 1024,
 ) -> tuple[Array, Array]:
     """Full re-rank stage: gather candidate vectors, exact top-k.
 
-    Exactly one of data (device) / data_np (host) must be provided.
+    Exactly one of data (device) / data_np (host) must be provided. Host
+    gathers are transparently chunked (see gather_host_vectors).
     """
     assert (data is None) != (data_np is None)
     if data is not None:

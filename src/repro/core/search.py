@@ -126,6 +126,30 @@ DistanceFn = Callable[[Array, Array], Array]  # ids (B,R), valid -> dists (B,R)
 # Built by repro.runtime.hostio.prefetch; when given, neighbor_fn takes
 # (u, token) and redeems the previous hop's ticket.
 PrefetchFn = Callable[[Array], Array]
+# (B, R) candidate ids -> (B, R) bool "deleted" mask (streaming mutability).
+TombstoneFn = Callable[[Array], Array]
+
+
+def tombstone_mask_fn(tombstones: Array) -> TombstoneFn:
+    """TombstoneFn over a device-resident (n,) bool bitmap.
+
+    The streaming-mutability tombstone seam (`repro.runtime.mutation`):
+    deleted ids are folded into the per-hop *validity* mask before the StepFn
+    boundary, so they are treated exactly like adjacency padding across all
+    three kernel modes -- never scored (dist stays +inf), never entered into
+    𝓛 or the bloom filter, never eligible for §4.6 selection, and therefore
+    never expanded, recorded in the re-rank history, or returned. Sentinel /
+    negative / out-of-range ids are never reported deleted (padding already
+    masks them).
+    """
+    n = tombstones.shape[0]
+
+    def fn(ids: Array) -> Array:
+        safe = jnp.clip(ids, 0, n - 1)
+        in_range = (ids >= 0) & (ids < n)
+        return tombstones[safe].astype(jnp.bool_) & in_range
+
+    return fn
 
 
 # ---------------------------------------------------------------------------
@@ -417,6 +441,7 @@ def bang_search(
     n_points: int,
     cfg: SearchConfig,
     prefetch_fn: PrefetchFn | None = None,
+    tombstone_fn: TombstoneFn | None = None,
 ) -> SearchResult:
     """Run Algorithm 2 for a batch of queries. Pure function of its inputs.
 
@@ -430,6 +455,14 @@ def bang_search(
     the next hop's expected-frontier gather and `neighbor_fn(u, token)`
     redeems the previous ticket, so the host gather overlaps device compute.
     Results are bit-exact vs the synchronous path.
+
+    With `tombstone_fn` (streaming mutability, `tombstone_mask_fn`) deleted
+    neighbour ids are masked out of the per-hop validity mask *before* the
+    StepFn boundary -- one seam that covers every kernel mode, because every
+    step implementation already treats invalid lanes as +inf/INVALID padding.
+    Deleted ids therefore never enter 𝓛, the bloom filter, the selection, or
+    the re-rank history. The search entry point (medoid) must not be
+    tombstoned -- `repro.runtime.mutation` enforces that at delete() time.
     """
     if step_fn is None:
         if distance_fn is None:
@@ -482,6 +515,12 @@ def bang_search(
         else:
             nbrs = neighbor_fn(s.u, s.tok)                        # (B, R)
         valid = (nbrs >= 0) & s.active[:, None]
+        if tombstone_fn is not None:
+            # Streaming mutability (§4.6 selection / worklist-merge masks):
+            # tombstoned neighbours become padding lanes right here, before
+            # the bloom filter and the StepFn, so every kernel mode scores
+            # them +inf and they never enter 𝓛 or the final top-k.
+            valid = valid & ~tombstone_fn(nbrs)
 
         # 2. Bloom filter: drop already-seen neighbours, insert fresh ones.
         fresh, filt = bloomlib.bloom_query_and_set(s.filt, nbrs, valid)
@@ -531,6 +570,8 @@ def search_inmem(
     adjacency: Array,
     medoid: int,
     cfg: SearchConfig,
+    *,
+    tombstone_fn: TombstoneFn | None = None,
 ) -> SearchResult:
     return bang_search(
         queries,
@@ -539,6 +580,7 @@ def search_inmem(
         medoid=medoid,
         n_points=codes.shape[0],
         cfg=cfg,
+        tombstone_fn=tombstone_fn,
     )
 
 
@@ -552,6 +594,7 @@ def search_base(
     *,
     neighbor_fn: NeighborFn | None = None,
     prefetch_fn: PrefetchFn | None = None,
+    tombstone_fn: TombstoneFn | None = None,
 ) -> SearchResult:
     """BANG Base. The default neighbour source is the inline synchronous
     host callback; the hostio subsystem passes its own (neighbor_fn,
@@ -565,6 +608,7 @@ def search_base(
         n_points=codes.shape[0],
         cfg=cfg,
         prefetch_fn=prefetch_fn,
+        tombstone_fn=tombstone_fn,
     )
 
 
@@ -574,6 +618,8 @@ def search_exact(
     adjacency: Array,
     medoid: int,
     cfg: SearchConfig,
+    *,
+    tombstone_fn: TombstoneFn | None = None,
 ) -> SearchResult:
     # Exact distances come from full vectors, so even "fused" keeps the
     # distance stage outside the kernel (FusedTraverseStep).
@@ -585,4 +631,5 @@ def search_exact(
         medoid=medoid,
         n_points=data.shape[0],
         cfg=cfg,
+        tombstone_fn=tombstone_fn,
     )

@@ -90,6 +90,23 @@ def _greedy_search_build(
     return ids, ds
 
 
+def greedy_search(
+    data: np.ndarray,
+    adjacency: np.ndarray,
+    start: int,
+    query: np.ndarray,
+    L: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Public GreedySearch(s, q, L): (visited_ids, visited_dists).
+
+    The build-time beam search, exposed for the streaming-mutability
+    consolidation pass (`repro.runtime.mutation`), which re-runs it on the
+    live adjacency to collect robust_prune candidates for folded-in delta
+    points -- exactly how `build_vamana` links a fresh insertion.
+    """
+    return _greedy_search_build(data, adjacency, start, query, L)
+
+
 def robust_prune(
     data: np.ndarray,
     p: int,

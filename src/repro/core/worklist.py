@@ -42,12 +42,6 @@ def worklist_init(batch: int, t: int) -> Worklist:
     )
 
 
-def _sort_key(dists: Array, ids: Array) -> Array:
-    """Composite sort key: primary dist, tie-break id (total order incl. pads)."""
-    # lax.sort with two operands gives lexicographic order; we use that.
-    return dists
-
-
 def sort_candidates(dists: Array, ids: Array) -> tuple[Array, Array]:
     """Sort (B, R) candidate lists ascending by (dist, id).
 
@@ -62,9 +56,15 @@ def merge_worklist(wl: Worklist, cand_dists: Array, cand_ids: Array) -> Worklist
     """Merge sorted candidates into the sorted worklist, keep t nearest.
 
     cand_* are (B, R), already sorted, padded with (+inf, INVALID_ID).
-    New entries enter unvisited; worklist entries keep their flags. The bloom
-    filter guarantees candidates are not already in 𝓛, so no dedup is needed
-    (paper Algorithm 2 lines 7-10 establish this invariant).
+    New entries enter unvisited; worklist entries keep their flags. The merge
+    is a pure sorted merge with NO dedup: an id present both in 𝓛 and in the
+    candidate list (or twice in the candidate list) keeps every copy, each
+    with its own (dist, visited) pair, and the t best copies survive by
+    (dist, id) order. Inside `bang_search` the bloom filter makes duplicates
+    rare but not impossible (callers may re-insert -- tombstoned re-inserts
+    of identical vectors make duplicate distances routine, and
+    tests/test_worklist.py exercises duplicate inserts directly), so callers
+    that need set semantics must dedup downstream.
     """
     t = wl.t
     d = jnp.concatenate([wl.dists, cand_dists], axis=-1)

@@ -4,8 +4,10 @@
 #   serving  -- streaming micro-batch serve loop with double buffering
 #   hostio   -- async host-I/O subsystem (multi-worker neighbour service,
 #               device-resident hot-adjacency cache, prefetched exchange)
+#   mutation -- streaming mutability: live insert/delete + consolidation
 from .executor import SearchExecutor, SearchHandle, bucket_size, pad_batch  # noqa: F401
 from .hostio import HostIOConfig, HostIORuntime, NeighborService  # noqa: F401
+from .mutation import DeltaGraph, MutableBangIndex, MutableSearchExecutor  # noqa: F401
 from .serving import BatchReport, ServePipeline, ServeStats  # noqa: F401
 from .sharded import SHARDED_VARIANTS, ShardedSearchExecutor  # noqa: F401
 from .train_loop import TrainLoopConfig, train_loop  # noqa: F401

@@ -123,6 +123,7 @@ class SearchExecutor:
         adjacency_dev: Array | None = None,
         min_bucket: int = 8,
         hostio: HostIOConfig | None = None,
+        with_tombstones: bool = False,
     ) -> None:
         if variant not in VARIANTS:
             raise ValueError(f"unknown variant {variant!r}, expected one of {VARIANTS}")
@@ -140,6 +141,11 @@ class SearchExecutor:
         self._data_dev = data_dev
         self._data_np = data_np
         self._hostio = hostio
+        # Streaming mutability: tombstone-capable executables take a second
+        # (n,) bool operand (the live-delete bitmap) so deletes never force a
+        # recompile; the flag rides the compile-cache key like hostio does.
+        self._with_tombstones = with_tombstones
+        self._tombstone_len = int(np.asarray(graph.adjacency).shape[0])
         self.hostio_runtime = None
         self._exchange = (None, None)
         if variant == "base":
@@ -213,7 +219,7 @@ class SearchExecutor:
         keying it keeps executables from ever being confused across
         executors whose caches are merged or persisted externally.
         """
-        key = (bucket, d, k, rerank, cfg, self._hostio)
+        key = (bucket, d, k, rerank, cfg, self._hostio, self._with_tombstones)
         entry = self._cache.get(key)
         if entry is not None:
             return entry, 0.0
@@ -235,13 +241,17 @@ class SearchExecutor:
         """Trace + lower + compile one executable for `key` (subclass hook)."""
         variant = self.variant
 
-        def pipeline(queries: Array):
+        def pipeline(queries: Array, tombstones: Array | None = None):
             # Trace-time side effect: runs once per compiled executable.
             self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
+            tombstone_fn = (
+                None if tombstones is None
+                else searchlib.tombstone_mask_fn(tombstones)
+            )
             if variant == "exact":
                 res = searchlib.search_exact(
                     queries, self._data_dev, self._adjacency,
-                    self._graph.medoid, cfg,
+                    self._graph.medoid, cfg, tombstone_fn=tombstone_fn,
                 )
                 # Exact-distance variant skips the re-rank (§5.2): the
                 # worklist already holds exact distances.
@@ -252,7 +262,7 @@ class SearchExecutor:
                 if variant == "inmem":
                     res = searchlib.search_inmem(
                         queries, table, self._codes, self._adjacency,
-                        self._graph.medoid, cfg,
+                        self._graph.medoid, cfg, tombstone_fn=tombstone_fn,
                     )
                 else:
                     neighbor_fn, prefetch_fn = self._exchange
@@ -260,6 +270,7 @@ class SearchExecutor:
                         queries, table, self._codes, self._adjacency_np,
                         self._graph.medoid, cfg,
                         neighbor_fn=neighbor_fn, prefetch_fn=prefetch_fn,
+                        tombstone_fn=tombstone_fn,
                     )
                 if rerank:
                     if variant == "base" or self._data_dev is None:
@@ -280,7 +291,17 @@ class SearchExecutor:
             return ids, dists, res.n_hops, res.n_iters
 
         spec = jax.ShapeDtypeStruct((bucket, d), jnp.float32)
-        return jax.jit(pipeline, donate_argnums=0).lower(spec).compile()
+        if not self._with_tombstones:
+            return jax.jit(pipeline, donate_argnums=0).lower(spec).compile()
+        # Tombstone-capable executable: the bitmap is a true operand (never a
+        # captured constant), so deletes update it without retracing; only
+        # the query buffer stays donated.
+        tomb_spec = jax.ShapeDtypeStruct((self._tombstone_len,), jnp.bool_)
+        return (
+            jax.jit(pipeline, donate_argnums=0)
+            .lower(spec, tomb_spec)
+            .compile()
+        )
 
     # ----------------------------------------------------- subclass hooks
     # ShardedSearchExecutor overrides these three to place queries on the
@@ -295,8 +316,22 @@ class SearchExecutor:
         # host round-trip in dispatch() is what guarantees that).
         return jax.device_put(q_padded)
 
-    def _run(self, compiled, q_dev: Array):
-        return compiled(q_dev)
+    def _device_tombstones(self, tombstones: np.ndarray | None) -> Array:
+        """Upload the (n,) bool delete bitmap (zeros when none was given)."""
+        if tombstones is None:
+            tombstones = np.zeros(self._tombstone_len, np.bool_)
+        tombstones = np.asarray(tombstones, np.bool_)
+        if tombstones.shape != (self._tombstone_len,):
+            raise ValueError(
+                f"tombstones must be ({self._tombstone_len},), got "
+                f"{tombstones.shape}"
+            )
+        return jax.device_put(tombstones)
+
+    def _run(self, compiled, q_dev: Array, tomb_dev: Array | None = None):
+        if tomb_dev is None:
+            return compiled(q_dev)
+        return compiled(q_dev, tomb_dev)
 
     # ------------------------------------------------------------ accounting
     def _hot_cache_fields(self, host_rows_in: int) -> dict:
@@ -351,6 +386,12 @@ class SearchExecutor:
             ),
             "model_shards": 1,
             "data_shards": 1,
+            # Streaming mutability (repro.runtime.mutation): fraction of
+            # graph nodes tombstoned and live delta-graph points. Static
+            # executors report the frozen-index identity (0.0, 0);
+            # MutableSearchExecutor overrides them per epoch.
+            "tombstone_fraction": 0.0,
+            "delta_points": 0,
             **hot,
         }
 
@@ -364,6 +405,7 @@ class SearchExecutor:
         cfg: SearchConfig | None = None,
         rerank: bool = True,
         kernel_mode: str | None = None,
+        tombstones: np.ndarray | None = None,
     ) -> SearchHandle:
         """Pad, compile-or-hit-cache, and asynchronously launch one batch.
 
@@ -373,10 +415,20 @@ class SearchExecutor:
         `kernel_mode` ("reference" | "staged" | "fused") overrides
         `cfg.kernel_mode`; it is part of the compile-cache key, so each mode
         compiles (once) to its own bucket-padded executable.
+
+        `tombstones` (executors built with `with_tombstones=True` only) is
+        the (n,) bool live-delete bitmap: it is a true operand of the
+        compiled executable, so updating it between dispatches never
+        retraces. None means "nothing deleted".
         """
         q = np.asarray(queries, np.float32)
         if q.ndim != 2:
             raise ValueError(f"queries must be (B, d), got shape {q.shape}")
+        if tombstones is not None and not self._with_tombstones:
+            raise ValueError(
+                "tombstones= requires an executor built with "
+                "with_tombstones=True"
+            )
         B, d = q.shape
         cfg = cfg or SearchConfig(t=max(t, k))
         if kernel_mode is not None:
@@ -389,8 +441,12 @@ class SearchExecutor:
         bucket = self._bucket_for(B)
         compiled, compile_s = self._compiled(bucket, d, k, rerank, cfg)
         q_dev = self._device_queries(pad_batch(q, bucket))
+        tomb_dev = (
+            self._device_tombstones(tombstones)
+            if self._with_tombstones else None
+        )
         t0 = time.perf_counter()
-        ids, dists, n_hops, n_iters = self._run(compiled, q_dev)
+        ids, dists, n_hops, n_iters = self._run(compiled, q_dev, tomb_dev)
         return SearchHandle(
             ids=ids, dists=dists, n_hops=n_hops, n_iters=n_iters,
             batch=B, bucket=bucket, dispatch_t=t0, compile_s=compile_s,
@@ -430,9 +486,11 @@ class SearchExecutor:
         rerank: bool = True,
         return_stats: bool = False,
         kernel_mode: str | None = None,
+        tombstones: np.ndarray | None = None,
     ) -> tuple[Array, Array] | tuple[Array, Array, SearchStats]:
         """Synchronous batched k-NN search: dispatch + finish."""
         handle = self.dispatch(
-            queries, k, t=t, cfg=cfg, rerank=rerank, kernel_mode=kernel_mode
+            queries, k, t=t, cfg=cfg, rerank=rerank, kernel_mode=kernel_mode,
+            tombstones=tombstones,
         )
         return self.finish(handle, return_stats=return_stats)

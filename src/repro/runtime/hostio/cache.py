@@ -78,6 +78,29 @@ class HotAdjacencyCache:
         """Bytes this cache pins on device (rows + id->slot map)."""
         return int(self._rows.nbytes + self._slot_of.nbytes)
 
+    # ------------------------------------------------------------- mutation
+    def refresh(self, adjacency: np.ndarray) -> None:
+        """Re-upload the pinned rows from a mutated adjacency (same hot set).
+
+        Streaming mutability: consolidation rewrites adjacency rows in place
+        (re-linking around deleted nodes), and a stale pinned row would be
+        served bit-for-bit to every future hit. Keeping the *same* hot ids
+        (in-degree skew doesn't move materially within one consolidation)
+        means `slot_of` is unchanged and only the (n_rows, R) row block is
+        re-uploaded; executables close over the cache object's buffers via
+        this attribute, so new traces see the fresh rows, and
+        `MutableBangIndex` drops old executables at the same epoch bump.
+        """
+        adjacency = np.asarray(adjacency, np.int32)
+        if adjacency.shape[0] < self.n or adjacency.shape[1] != self.R:
+            raise ValueError(
+                f"refresh adjacency must cover ({self.n}, {self.R}), got "
+                f"{adjacency.shape}"
+            )
+        self._rows = jnp.asarray(
+            np.ascontiguousarray(adjacency[self.hot_ids])
+        )
+
     # ------------------------------------------------------------------ probe
     def probe(self, u):
         """(rows (B, R), hit (B,)) for a traced frontier id vector.

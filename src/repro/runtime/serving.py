@@ -19,7 +19,11 @@ work of the next query batch with the device-side search of the current one.
     the executor at all (paper §6 serves stateless batches; repeat traffic
     is the obvious serving win). Hits return bit-identical ids/dists -- the
     cache stores the executor's own outputs -- and are reported in
-    `ServeStats.result_cache_hits`/`result_cache_hit_rate`.
+    `ServeStats.result_cache_hits`/`result_cache_hit_rate`. The cache is
+    **mutation-epoch scoped**: when the executor exposes `mutation_epoch`
+    (`repro.runtime.mutation.MutableSearchExecutor`), every insert/delete/
+    consolidation bumps it and the next drain() drops all cached results, so
+    a hit can never return a tombstoned id or miss a fresh insert.
   * **Host-I/O lifecycle.** When the executor serves its graph through the
     async host-I/O subsystem (`repro.runtime.hostio`), the pipeline owns the
     service: worker pools start at pipeline construction, `close()` (or the
@@ -80,10 +84,11 @@ class ServeStats:
                             # result-cache hits count as served queries
     p50_ms: float           # per-row latency percentiles (enqueue -> ready)
     p95_ms: float
-    mean_recall: float | None  # mean recall@k over batches with ground truth
+    mean_recall: float | None  # row-weighted mean recall@k over gt rows
     result_cache_hits: int = 0      # rows served from the query-result LRU
     result_cache_hit_rate: float = 0.0  # hits / queries in this window
     hostio: dict | None = None  # NeighborService counter snapshot, if any
+    mutation: dict | None = None  # MutableSearchExecutor counters, if any
 
 
 class ServePipeline:
@@ -125,6 +130,11 @@ class ServePipeline:
         self._result_cache_size = result_cache_size
         self._result_cache: OrderedDict[bytes, tuple[np.ndarray, np.ndarray]]
         self._result_cache = OrderedDict()
+        # Mutation-epoch scoping: cached results are only valid for the
+        # executor epoch they were computed under. Executors without a
+        # mutation_epoch attribute read as None forever -> cache never
+        # invalidates (the frozen-index behaviour).
+        self._result_cache_epoch = getattr(executor, "mutation_epoch", None)
         self.last_stats: ServeStats | None = None
         # The pipeline owns the executor's host-I/O service lifecycle: spin
         # the worker pools up front so the first drain doesn't pay thread
@@ -184,6 +194,11 @@ class ServePipeline:
     def _cache_insert(self, queries: np.ndarray, ids, dists) -> None:
         if self._result_cache_size == 0:
             return
+        if getattr(self._ex, "mutation_epoch", None) != self._result_cache_epoch:
+            # A mutation landed between this drain's epoch check and these
+            # results coming back: they may already be stale, so don't cache
+            # them (the next drain clears and re-syncs the epoch).
+            return
         for q_row, i_row, d_row in zip(queries, np.asarray(ids), np.asarray(dists)):
             self._result_cache[q_row.tobytes()] = (i_row.copy(), d_row.copy())
             self._result_cache.move_to_end(q_row.tobytes())
@@ -196,10 +211,19 @@ class ServePipeline:
         """Process every queued query; results aligned to submission order."""
         n = len(self._queue)
         k = self._k
+        # Mutation-epoch fence: every insert()/delete()/consolidate() on a
+        # MutableSearchExecutor bumps its epoch, and results cached under an
+        # older epoch may name deleted ids or miss fresh ones -- drop them.
+        epoch = getattr(self._ex, "mutation_epoch", None)
+        if epoch != self._result_cache_epoch:
+            self._result_cache.clear()
+            self._result_cache_epoch = epoch
         ids_out = np.full((n, k), -1, np.int32)
         dists_out = np.full((n, k), np.inf, np.float32)
         latencies: list[float] = []
-        recalls: list[float] = []
+        # (recall, n_gt_rows) pairs: the final stat is row-weighted so a
+        # 1-row tail micro-batch can't outvote a 128-row batch.
+        recalls: list[tuple[float, int]] = []
         batches = 0
         compile_s = 0.0
         cache_hits = 0
@@ -225,68 +249,102 @@ class ServePipeline:
         self._queue.clear()
         if hit_gt_ids:
             kk = min(k, min(len(g) for g in hit_gt_true))
-            recalls.append(recall_at_k(
+            recalls.append((recall_at_k(
                 np.stack(hit_gt_ids)[:, :kk],
                 np.stack([g[:kk] for g in hit_gt_true]),
-            ))
+            ), len(hit_gt_ids)))
 
         inflight: tuple[list, list, SearchHandle, float] | None = None
-        while misses or inflight is not None:
-            nxt = None
-            if misses:
-                # Host-side work for the next batch (pop, stack, pad, upload,
-                # async dispatch) happens while the previous batch computes.
-                popped = [
-                    misses.popleft()
-                    for _ in range(min(self._max_batch, len(misses)))
-                ]
-                at_idx = [p[0] for p in popped]
-                rows = [p[1] for p in popped]
-                queries = np.stack([r[0] for r in rows])
-                t_disp = time.perf_counter()
-                handle = self._ex.dispatch(
-                    queries, k, cfg=self._cfg, rerank=self._rerank
-                )
-                nxt = (rows, at_idx, handle, t_disp)
+        nxt: tuple[list, list, SearchHandle, float] | None = None
+        try:
+            while misses or inflight is not None:
+                nxt = None
+                if misses:
+                    # Host-side work for the next batch (pop, stack, pad,
+                    # upload, async dispatch) happens while the previous
+                    # batch computes.
+                    popped = [
+                        misses.popleft()
+                        for _ in range(min(self._max_batch, len(misses)))
+                    ]
+                    at_idx = [p[0] for p in popped]
+                    rows = [p[1] for p in popped]
+                    queries = np.stack([r[0] for r in rows])
+                    t_disp = time.perf_counter()
+                    try:
+                        handle = self._ex.dispatch(
+                            queries, k, cfg=self._cfg, rerank=self._rerank
+                        )
+                    except BaseException:
+                        # The popped rows never reached the device; put them
+                        # back so the outer handler re-enqueues them.
+                        misses.extendleft(reversed(popped))
+                        raise
+                    nxt = (rows, at_idx, handle, t_disp)
 
-            if inflight is not None:
-                rows, at_idx, handle, t_disp = inflight
-                ids, dists = self._ex.finish(handle)
-                ready = time.perf_counter()
-                ids = np.asarray(ids)
-                dists = np.asarray(dists)
-                ids_out[at_idx] = ids
-                dists_out[at_idx] = dists
-                self._cache_insert(np.stack([r[0] for r in rows]), ids, dists)
-                latencies.extend((ready - r[1]) * 1e3 for r in rows)
-                compile_s += handle.compile_s
-                # Score whichever rows carry ground truth (a micro-batch may
-                # mix gt and non-gt rows across submit() calls). Truncate to
-                # min(k, gt width) so wide gt doesn't deflate the ratio.
-                gt_idx = [i for i, r in enumerate(rows) if r[2] is not None]
-                rec = None
-                if gt_idx:
-                    # Rows may carry gt of different widths (separate
-                    # submit() calls); truncate to the narrowest before
-                    # stacking so wide gt doesn't deflate the ratio and
-                    # ragged widths don't crash the stack.
-                    gt_rows = [rows[i][2] for i in gt_idx]
-                    kk = min(ids.shape[1], min(len(g) for g in gt_rows))
-                    gt = np.stack([g[:kk] for g in gt_rows])
-                    rec = recall_at_k(ids[gt_idx][:, :kk], gt)
-                    recalls.append(rec)
-                if on_batch is not None:
-                    on_batch(BatchReport(
-                        index=batches, size=len(rows), wall_s=ready - t_disp,
-                        compile_s=handle.compile_s, recall=rec,
-                        ids=ids, dists=dists,
-                    ))
-                batches += 1
-            inflight = nxt
+                if inflight is not None:
+                    rows, at_idx, handle, t_disp = inflight
+                    ids, dists = self._ex.finish(handle)
+                    ready = time.perf_counter()
+                    ids = np.asarray(ids)
+                    dists = np.asarray(dists)
+                    ids_out[at_idx] = ids
+                    dists_out[at_idx] = dists
+                    self._cache_insert(np.stack([r[0] for r in rows]), ids, dists)
+                    latencies.extend((ready - r[1]) * 1e3 for r in rows)
+                    compile_s += handle.compile_s
+                    # Score whichever rows carry ground truth (a micro-batch
+                    # may mix gt and non-gt rows across submit() calls).
+                    # Truncate to min(k, gt width) so wide gt doesn't deflate
+                    # the ratio.
+                    gt_idx = [i for i, r in enumerate(rows) if r[2] is not None]
+                    rec = None
+                    if gt_idx:
+                        # Rows may carry gt of different widths (separate
+                        # submit() calls); truncate to the narrowest before
+                        # stacking so wide gt doesn't deflate the ratio and
+                        # ragged widths don't crash the stack.
+                        gt_rows = [rows[i][2] for i in gt_idx]
+                        kk = min(ids.shape[1], min(len(g) for g in gt_rows))
+                        gt = np.stack([g[:kk] for g in gt_rows])
+                        rec = recall_at_k(ids[gt_idx][:, :kk], gt)
+                        recalls.append((rec, len(gt_idx)))
+                    if on_batch is not None:
+                        on_batch(BatchReport(
+                            index=batches, size=len(rows),
+                            wall_s=ready - t_disp,
+                            compile_s=handle.compile_s, recall=rec,
+                            ids=ids, dists=dists,
+                        ))
+                    batches += 1
+                inflight = nxt
+                nxt = None
+        except BaseException:
+            # Exception safety: the pre-pass cleared self._queue, so without
+            # this every un-dispatched miss would be silently dropped and the
+            # in-flight handles leaked. Discard the handles (block so device
+            # buffers settle; ignore their own failures) and re-enqueue every
+            # row whose result was never recorded, in submission order, before
+            # re-raising -- the caller can retry drain() after handling the
+            # error.
+            pending: list = []
+            for batch in (inflight, nxt):
+                if batch is None:
+                    continue
+                try:
+                    self._ex.finish(batch[2])
+                except Exception:
+                    pass
+                pending.extend(batch[0])
+            pending.extend(row for _at, row in misses)
+            self._queue.extend(pending)
+            raise
 
         wall = time.perf_counter() - t_start
         steady = max(wall - compile_s, 1e-9)
         rt = getattr(self._ex, "hostio_runtime", None)
+        mut = getattr(self._ex, "mutation_stats", None)
+        n_gt = sum(rows for _r, rows in recalls)
         stats = ServeStats(
             batches=batches,
             queries=n,
@@ -295,10 +353,14 @@ class ServePipeline:
             qps=n / steady,
             p50_ms=float(np.percentile(latencies, 50)) if latencies else 0.0,
             p95_ms=float(np.percentile(latencies, 95)) if latencies else 0.0,
-            mean_recall=float(np.mean(recalls)) if recalls else None,
+            mean_recall=(
+                float(sum(r * rows for r, rows in recalls) / n_gt)
+                if n_gt else None
+            ),
             result_cache_hits=cache_hits,
             result_cache_hit_rate=cache_hits / n if n else 0.0,
             hostio=None if rt is None else rt.stats(),
+            mutation=mut() if callable(mut) else mut,
         )
         self.last_stats = stats
         return ids_out, dists_out, stats

@@ -71,7 +71,7 @@ from repro.core.distributed import (
     pad_to_multiple,
     sharded_bang_search_block,
 )
-from repro.core.search import SearchConfig
+from repro.core.search import SearchConfig, tombstone_mask_fn
 from repro.core.vamana import VamanaGraph
 
 from .executor import SearchExecutor, bucket_size
@@ -98,6 +98,7 @@ class ShardedSearchExecutor(SearchExecutor):
         model_axis: str = "model",
         min_bucket: int = 8,
         hostio: HostIOConfig | None = None,
+        with_tombstones: bool = False,
     ) -> None:
         if variant not in SHARDED_VARIANTS:
             raise ValueError(
@@ -126,6 +127,7 @@ class ShardedSearchExecutor(SearchExecutor):
         self._model_axis = model_axis
         self._graph = graph
         self._hostio = hostio
+        self._with_tombstones = with_tombstones
         self.hostio_runtime = None
         self._exchange = (None, None)
         self._init_serving_state(min_bucket)
@@ -140,6 +142,11 @@ class ShardedSearchExecutor(SearchExecutor):
         codes_np = pad_to_multiple(np.asarray(codes, np.uint8), S, 0)
         data_np = pad_to_multiple(np.asarray(data, np.float32), S, 0.0)
         self.R = adjacency.shape[1]
+        # Tombstone bitmap spans the *padded* row count; pad rows are
+        # unreachable, so their (False) tombstone lanes are inert. Callers
+        # may hand the unpadded (n,) bitmap -- _device_tombstones pads it.
+        self._tombstone_len = adjacency.shape[0]
+        self._tombstone_sharding = NamedSharding(mesh, P())
         model_spec = NamedSharding(mesh, P(model_axis, None))
         if variant == "sharded-base":
             # Sharded BANG Base: the graph never touches device memory. Each
@@ -196,20 +203,33 @@ class ShardedSearchExecutor(SearchExecutor):
         else:
             neighbor_fn = None
 
-        def pipeline(queries, codebooks, codes, adjacency, data):
+        def pipeline(queries, codebooks, codes, adjacency, data,
+                     tombstones=None):
             # Trace-time side effect: runs once per compiled executable.
             self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
             table = pqlib.build_dist_table(pqlib.PQCodec(codebooks), queries)
+            # Replicated (P()) bitmap: inside shard_map every shard sees the
+            # full (n,) array, so the mask fn works on global ids directly.
+            tfn = None if tombstones is None else tombstone_mask_fn(tombstones)
             return sharded_bang_search_block(
                 queries, table, codes, adjacency, data,
                 medoid, k, cfg, maxis, rerank=rerank, neighbor_fn=neighbor_fn,
-                prefetch_fn=prefetch_fn,
+                prefetch_fn=prefetch_fn, tombstone_fn=tfn,
             )
 
         # The base mode's executable takes no adjacency operand at all: the
         # graph lives behind the per-shard host callbacks closed over above.
+        # Tombstone-capable executables append the replicated (n,) bool
+        # bitmap as a trailing operand (never a captured constant), so
+        # deletes update it without retracing.
+        tomb = self._with_tombstones
         if host_graph:
-            fn = lambda q, cb, c, dt: pipeline(q, cb, c, None, dt)  # noqa: E731
+            if tomb:
+                fn = lambda q, cb, c, dt, tb: pipeline(  # noqa: E731
+                    q, cb, c, None, dt, tb)
+            else:
+                fn = lambda q, cb, c, dt: pipeline(  # noqa: E731
+                    q, cb, c, None, dt)
             in_specs = (P(daxis, None), P(), P(maxis, None), P(maxis, None))
         else:
             fn = pipeline
@@ -220,6 +240,8 @@ class ShardedSearchExecutor(SearchExecutor):
                 P(maxis, None),      # adjacency
                 P(maxis, None),      # data
             )
+        if tomb:
+            in_specs = in_specs + (P(),)   # tombstones (replicated)
 
         sharded = shard_map(
             fn,
@@ -238,6 +260,11 @@ class ShardedSearchExecutor(SearchExecutor):
             else (q_spec, self._codebooks, self._codes,
                   self._adjacency, self._data_dev)
         )
+        if tomb:
+            operands = operands + (jax.ShapeDtypeStruct(
+                (self._tombstone_len,), jnp.bool_,
+                sharding=self._tombstone_sharding,
+            ),)
         return (
             jax.jit(sharded, donate_argnums=0).lower(*operands).compile()
         )
@@ -252,12 +279,34 @@ class ShardedSearchExecutor(SearchExecutor):
     def _device_queries(self, q_padded: np.ndarray) -> Array:
         return jax.device_put(q_padded, self._query_sharding)
 
-    def _run(self, compiled, q_dev: Array):
+    def _device_tombstones(self, tombstones: np.ndarray | None) -> Array:
+        """Replicated (padded-n,) bitmap; accepts the unpadded (n,) form."""
+        if tombstones is None:
+            tombstones = np.zeros(self._tombstone_len, np.bool_)
+        tombstones = np.asarray(tombstones, np.bool_)
+        if tombstones.shape != (self._tombstone_len,):
+            n = int(np.asarray(self._graph.adjacency).shape[0])
+            if tombstones.shape == (n,):
+                tombstones = np.concatenate(
+                    [tombstones,
+                     np.zeros(self._tombstone_len - n, np.bool_)]
+                )
+            else:
+                raise ValueError(
+                    f"tombstones must be ({n},) or padded "
+                    f"({self._tombstone_len},), got {tombstones.shape}"
+                )
+        return jax.device_put(tombstones, self._tombstone_sharding)
+
+    def _run(self, compiled, q_dev: Array, tomb_dev: Array | None = None):
         if self.variant == "sharded-base":
-            return compiled(q_dev, self._codebooks, self._codes, self._data_dev)
-        return compiled(
-            q_dev, self._codebooks, self._codes, self._adjacency, self._data_dev
-        )
+            operands = (q_dev, self._codebooks, self._codes, self._data_dev)
+        else:
+            operands = (q_dev, self._codebooks, self._codes,
+                        self._adjacency, self._data_dev)
+        if tomb_dev is not None:
+            operands = operands + (tomb_dev,)
+        return compiled(*operands)
 
     # ------------------------------------------------------------ accounting
     def exchange_bytes_per_hop(self, batch: int) -> dict:
@@ -298,5 +347,9 @@ class ShardedSearchExecutor(SearchExecutor):
             ),
             "model_shards": S,
             "data_shards": self.n_data_shards,
+            # Streaming mutability: frozen-index identity here;
+            # MutableSearchExecutor overrides per epoch.
+            "tombstone_fraction": 0.0,
+            "delta_points": 0,
             **hot,
         }

@@ -173,3 +173,66 @@ def test_serve_pipeline_recall_with_mixed_and_wide_gt(small_ann_index):
     _, _, stats = pipe.drain()
     assert stats.batches == 1
     assert stats.mean_recall is not None and stats.mean_recall >= 0.8
+
+
+def test_mean_recall_is_row_weighted(small_ann_index):
+    """ServeStats.mean_recall must equal the flat per-row recall: a 1-row
+    tail micro-batch may not weigh the same as a full batch (regression)."""
+    from repro.core import brute_force_knn, recall_at_k
+
+    data, idx = small_ann_index
+    queries = uniform_queries(data, 9, seed=51)
+    gt = brute_force_knn(data, queries, 5)
+    pipe = ServePipeline(
+        idx.executor("inmem"), k=5, cfg=SearchConfig(t=48, bloom_z=8192),
+        max_batch=8,                                    # batches of 8 and 1
+    )
+    pipe.submit(queries, gt_ids=gt)
+    ids, _, stats = pipe.drain()
+    assert stats.batches == 2
+    flat = recall_at_k(ids, np.asarray(gt))
+    assert stats.mean_recall == pytest.approx(flat)
+
+
+class _FlakyExecutor:
+    """Wraps a real executor; dispatch raises after `ok_dispatches` calls."""
+
+    def __init__(self, ex, ok_dispatches: int):
+        self._ex = ex
+        self._ok = ok_dispatches
+        self.calls = 0
+
+    def dispatch(self, *a, **kw):
+        self.calls += 1
+        if self.calls > self._ok:
+            raise RuntimeError("injected dispatch failure")
+        return self._ex.dispatch(*a, **kw)
+
+    def finish(self, *a, **kw):
+        return self._ex.finish(*a, **kw)
+
+
+def test_drain_requeues_queries_on_dispatch_error(small_ann_index):
+    """drain() must not lose queries when a dispatch fails mid-loop: the
+    un-dispatched misses AND the rows of discarded in-flight batches are
+    re-enqueued, and a retry serves everything (regression)."""
+    data, idx = small_ann_index
+    cfg = SearchConfig(t=32, bloom_z=8192)
+    queries = uniform_queries(data, 40, seed=52)
+    direct_ids, direct_dists = idx.search(queries, 5, cfg=cfg)
+
+    flaky = _FlakyExecutor(idx.executor("inmem"), ok_dispatches=1)
+    pipe = ServePipeline(flaky, k=5, cfg=cfg, max_batch=16)
+    pipe.submit(queries)
+    with pytest.raises(RuntimeError, match="injected"):
+        pipe.drain()
+    # Batch 1 (16 rows) was dispatched but its results were never recorded,
+    # batch 2's dispatch raised before launch, batch 3 was never popped:
+    # every row must be back in the queue.
+    assert pipe.pending() == 40
+    flaky._ok = 10**9                          # heal the executor
+    ids, dists, stats = pipe.drain()
+    assert pipe.pending() == 0
+    np.testing.assert_array_equal(ids, np.asarray(direct_ids))
+    np.testing.assert_array_equal(dists, np.asarray(direct_dists))
+    assert stats.queries == 40
