@@ -25,7 +25,13 @@ link; the server prints the measured hit rate and bytes saved), and
 `--prefetch` double-buffers the frontier exchange (hop k+1's expected gather
 issued while the device merges hop k; the server prints the measured overlap
 fraction). `--result-cache N` enables the ServePipeline cross-batch
-query-result LRU (any variant). `--mutate` interleaves live inserts/deletes
+query-result LRU (any variant). `--autotune` sweeps the fused megakernel's
+scheduling knobs (eager/lazy §4.6 selection, beyond-VMEM DMA tile size) on
+real searches before serving and persists the winners to `--autotune-cache`
+(JSON keyed by device kind, bucket, R, m); a pre-existing cache file is
+applied even without the sweep, and the latency-hiding XLA scheduler flags
+are installed before the backend initialises. `--mutate` interleaves live
+inserts/deletes
 with the serving batches through a `MutableBangIndex` (plus a background
 consolidation halfway through), scoring recall against the live corpus.
 On a CPU host `--devices N` forces N fake
@@ -74,6 +80,18 @@ kernel-mode matrix (traversal-step implementation, --kernel-mode):
                        whole hop in one          ADC kernel + psum, fused
                        pallas_call, in-kernel    traverse kernel (exact L2
                        code gather               stays outside either way)
+
+kernel-mode fallback rules: 'fused' NEVER silently falls back to 'staged'.
+When the PQ-codes block exceeds the VMEM budget (REPRO_VMEM_BUDGET env, 16
+MiB default) the fused kernel streams it through a double-buffered DMA
+pipeline -- tile i+1's async copy overlaps tile i's ADC -- and stays
+bit-exact vs every other mode. The DMA tile size is SearchConfig.
+codes_tile_rows (0 = auto from the budget); --autotune sweeps it together
+with the eager/lazy selection flavour and persists per-(device kind,
+bucket, R, m) winners to --autotune-cache, which executors apply inside
+the compile-cache key (a reloaded file reproduces identical keys). A
+missing or corrupt cache file falls back to default configs with a
+warning -- tuning can never take serving down.
 
 host-I/O matrix (async host subsystem, base / sharded-base only; every
 combination is bit-exact vs the inline-callback path in every kernel mode):
@@ -156,6 +174,15 @@ def main() -> None:
     ap.add_argument("--result-cache", type=int, default=0,
                     help="ServePipeline cross-batch query-result LRU size "
                          "(0 = off)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="sweep the fused megakernel's (eager, DMA tile) "
+                         "configs on real searches before serving and "
+                         "persist the winners to --autotune-cache; an "
+                         "existing cache file is applied either way (see "
+                         "the fallback rules below)")
+    ap.add_argument("--autotune-cache", default="bang_autotune.json",
+                    help="JSON winners file keyed by (device kind, bucket, "
+                         "R, m) (default: %(default)s)")
     ap.add_argument("--mutate", action="store_true",
                     help="wrap the index in a MutableBangIndex and "
                          "interleave inserts/deletes with the serving "
@@ -171,6 +198,13 @@ def main() -> None:
             os.environ.get("XLA_FLAGS", "")
             + f" --xla_force_host_platform_device_count={args.devices}"
         ).strip()
+
+    # Latency-hiding scheduler flags must also land before backend init
+    # (repro.kernels.autotune imports no jax at module level, so this is
+    # still pre-backend). Idempotent; explicit caller XLA_FLAGS win.
+    from repro.kernels.autotune import AutotuneCache, setup_xla_flags
+
+    setup_xla_flags()
 
     import jax
 
@@ -200,6 +234,16 @@ def main() -> None:
     elif args.hot_cache_rows or args.prefetch:
         raise SystemExit("--hot-cache-rows/--prefetch need --host-workers >= 1")
 
+    autotune = None
+    if args.autotune or os.path.exists(args.autotune_cache):
+        if args.mutate and args.autotune:
+            raise SystemExit("--autotune does not combine with --mutate "
+                             "(tune first, then serve mutably)")
+        # A pre-existing winners file is applied even without the sweep;
+        # missing/corrupt files degrade to defaults with a warning.
+        autotune = AutotuneCache.load(args.autotune_cache) \
+            if os.path.exists(args.autotune_cache) else AutotuneCache()
+
     # sharded -> default all-device mesh
     mut = None
     if args.mutate:
@@ -208,7 +252,24 @@ def main() -> None:
         mut = MutableBangIndex(index)
         executor = mut.executor(args.variant, hostio=hostio)
     else:
-        executor = index.executor(args.variant, hostio=hostio)
+        executor = index.executor(args.variant, hostio=hostio,
+                                  autotune=autotune)
+
+    if args.autotune:
+        from repro.kernels.autotune import autotune_executor, device_kind
+
+        tune_q = uniform_queries(data, min(args.batch_size, args.max_batch),
+                                 seed=99)
+        print(f"[serve] autotuning fused megakernel on {device_kind()} "
+              f"(bucket for batch {len(tune_q)}) ...")
+        autotune_executor(executor, tune_q, k=args.k, t=args.t,
+                          cache=autotune)
+        autotune.save(args.autotune_cache)
+        for key, w in autotune.winners.items():
+            print(f"[serve]   winner {key}: eager={w['eager']} "
+                  f"codes_tile_rows={w['codes_tile_rows']} "
+                  f"({w['per_hop_us']:.0f} us/hop)")
+        print(f"[serve] winners persisted to {args.autotune_cache}")
     x = executor.exchange_bytes_per_hop(args.max_batch)
     if args.variant.startswith("sharded"):
         print(

@@ -35,6 +35,20 @@ sharded case) and only frontier ids / adjacency rows cross the host link.
 Legacy `SearchConfig(use_kernels=True)` is an alias for
 `kernel_mode="staged"`.
 
+Beyond-VMEM regime (fallback rules): "fused" NEVER silently falls back to
+"staged". When the PQ-codes block exceeds the VMEM budget
+(`REPRO_VMEM_BUDGET` env, 16 MiB default -- the billion-scale shard regime)
+the megakernel keeps the block in HBM and streams it through a
+double-buffered DMA pipeline: the async copy of code tile i+1 overlaps the
+ADC contraction on tile i, and every candidate lane's distance comes from
+its single owning tile, so results stay bit-exact vs the resident kernel
+and every other mode. The DMA tile size is `SearchConfig.codes_tile_rows`
+(0 = auto-sized from the budget); `repro.kernels.autotune` sweeps it with
+the eager/lazy §4.6 selection flavour per batch bucket and persists winners
+as JSON keyed by (device kind, bucket, R, m), which executors built with
+`autotune=` apply inside the compile-cache key. A missing/corrupt winners
+file degrades to default configs with a warning.
+
 The host-graph cells additionally take `hostio=HostIOConfig(...)` (the async
 host-I/O subsystem, `repro.runtime.hostio`) -- the paper's CPU half as a
 first-class service instead of an inline callback. Orthogonal to both axes
@@ -151,7 +165,10 @@ class BangIndex:
         return self.codes.shape[0]
 
     # ----------------------------------------------------------------- search
-    def executor(self, variant: str = "inmem", *, mesh=None, hostio=None):
+    def executor(
+        self, variant: str = "inmem", *, mesh=None, hostio=None,
+        autotune=None,
+    ):
         """The jit-cached executor serving this index for `variant`.
 
         Executors are created lazily and cached per variant; device state
@@ -174,6 +191,12 @@ class BangIndex:
         exchange — instead of the inline synchronous callbacks; executors
         are cached per (variant, mesh, hostio), so differently-configured
         services never share worker pools or compiled executables.
+
+        `autotune=AutotuneCache(...)` (`repro.kernels.autotune`) applies
+        persisted megakernel tuning winners -- keyed by
+        (device kind, bucket, R, m) -- to every compile of this executor;
+        the tuned fields ride the compile-cache key. Executors are cached
+        per (variant, mesh, hostio, autotune) by cache-object identity.
         """
         if variant in ("sharded", "sharded-base"):
             if mesh is None:
@@ -189,14 +212,15 @@ class BangIndex:
                 "hostio= only applies to the host-resident-graph variants "
                 f"('base', 'sharded-base'), got {variant!r}"
             )
-        key: Any = (variant, mesh, hostio)
+        key: Any = (variant, mesh, hostio, autotune)
         ex = self._executors.get(key)
         if ex is None:
             if variant in ("sharded", "sharded-base"):
                 from repro.runtime.sharded import ShardedSearchExecutor
 
                 ex = ShardedSearchExecutor.from_index(
-                    self, mesh, variant=variant, hostio=hostio
+                    self, mesh, variant=variant, hostio=hostio,
+                    autotune=autotune,
                 )
             else:
                 from repro.runtime.executor import SearchExecutor
@@ -213,7 +237,7 @@ class BangIndex:
                             break
                 ex = SearchExecutor.from_index(
                     self, variant=variant, adjacency_dev=shared_adj,
-                    hostio=hostio,
+                    hostio=hostio, autotune=autotune,
                 )
             self._executors[key] = ex
         return ex

@@ -147,6 +147,7 @@ def sharded_adc_distance_fn(
     use_kernels: bool = False,
     *,
     kernel_mode: str | None = None,
+    codes_tile_rows: int = 0,
 ):
     """Owner-computed ADC distances + psum (§4.5 at pod scale).
 
@@ -156,8 +157,10 @@ def sharded_adc_distance_fn(
       "reference"  XLA gather + take_along_axis ADC
       "staged"     XLA gather into a (B, R, m) HBM temporary + pq_adc kernel
       "fused"      search_step.local_adc -- the gather happens *inside* the
-                   kernel on the shard's VMEM-resident codes block, masked to
-                   the rows this shard owns; no HBM temporary.
+                   kernel on the shard's codes block (VMEM-resident while it
+                   fits the budget, DMA-pipelined from HBM beyond it --
+                   `codes_tile_rows` follows resolve_codes_tiling), masked
+                   to the rows this shard owns; no HBM temporary.
 
     All three contribute bit-identical owner rows (0 elsewhere), so the psum
     reconstruction -- and therefore the traversal -- is mode-independent.
@@ -170,7 +173,9 @@ def sharded_adc_distance_fn(
         if mode == "fused":
             from repro.kernels.search_step import ops as step_ops
 
-            d = step_ops.local_adc(table, codes_local, rel, own)
+            d = step_ops.local_adc(
+                table, codes_local, rel, own, tile_rows=codes_tile_rows
+            )
         elif mode == "staged":
             from repro.kernels.pq_adc import ops as adc_ops
 
@@ -250,7 +255,8 @@ def sharded_bang_search_block(
     # the mesh, and sort+select+merge run in the fused traverse kernel on the
     # reconstructed rows.
     distance_fn = sharded_adc_distance_fn(
-        table, codes_local, axis, kernel_mode=cfg.resolved_kernel_mode()
+        table, codes_local, axis, kernel_mode=cfg.resolved_kernel_mode(),
+        codes_tile_rows=cfg.codes_tile_rows,
     )
     res: SearchResult = bang_search(
         queries,

@@ -81,6 +81,18 @@ class SearchConfig:
     eager: bool = True           # §4.6 eager candidate selection
     use_kernels: bool = False    # legacy alias for kernel_mode="staged"
     kernel_mode: str | None = None  # "reference" | "staged" | "fused"
+    # Fused-kernel codes placement (kernels.search_step.resolve_codes_tiling):
+    # 0 auto-places the PQ codes block (VMEM-resident while it fits the
+    # budget, DMA-pipelined from HBM beyond it); > 0 forces that DMA tile
+    # row count -- the autotuner's knob. All placements are bit-identical;
+    # non-fused modes ignore it (but it still keys compiled executables).
+    codes_tile_rows: int = 0
+
+    def __post_init__(self) -> None:
+        if self.codes_tile_rows < 0:
+            raise ValueError(
+                f"codes_tile_rows must be >= 0, got {self.codes_tile_rows}"
+            )
 
     def iters(self) -> int:
         return self.max_iters if self.max_iters > 0 else int(1.5 * self.t) + 8
@@ -313,13 +325,20 @@ class FusedStep(StepFn):
 
     The code gather happens *inside* the kernel (satisfying the VMEM-only
     candidate path): no (B, R, m) gathered-codes HBM temporary, no (B, R)
-    intermediate tiles between stages.
+    intermediate tiles between stages. `tile_rows` picks the codes-block
+    placement (0 = auto: VMEM-resident while it fits the budget, else the
+    double-buffered DMA pipeline) -- beyond-VMEM blocks stream from HBM
+    instead of falling back to the staged path, bit-identically.
     """
 
-    def __init__(self, table: Array, codes: Array, eager: bool = True) -> None:
+    def __init__(
+        self, table: Array, codes: Array, eager: bool = True,
+        tile_rows: int = 0,
+    ) -> None:
         self.table = table
         self.codes = codes
         self.eager = eager
+        self.tile_rows = tile_rows
 
     def init_dists(self, ids: Array, valid: Array) -> Array:
         # One-off medoid seeding: same one-hot ADC kernel as the staged path
@@ -337,7 +356,8 @@ class FusedStep(StepFn):
         from repro.kernels.search_step import ops as step_ops
 
         return step_ops.fused_step(
-            self.table, self.codes, wl, nbrs, fresh, active, eager=self.eager
+            self.table, self.codes, wl, nbrs, fresh, active,
+            eager=self.eager, tile_rows=self.tile_rows,
         )
 
 
@@ -356,7 +376,7 @@ def _adc_step_fn(table: Array, codes: Array, cfg: SearchConfig) -> StepFn:
     code gather); staged/reference keep the XLA gather in the DistanceFn."""
     mode = cfg.resolved_kernel_mode()
     if mode == "fused":
-        return FusedStep(table, codes, cfg.eager)
+        return FusedStep(table, codes, cfg.eager, cfg.codes_tile_rows)
     return make_step_fn(cfg, _adc_distance_fn(table, codes, mode == "staged"))
 
 

@@ -1,0 +1,302 @@
+"""Autotuner for the fused traversal megakernel (beyond-VMEM DMA regime).
+
+The fused search-step kernel now has real scheduling knobs: the codes-block
+placement (`SearchConfig.codes_tile_rows` -- VMEM-resident vs the
+double-buffered DMA pipeline, and the DMA tile size) and the §4.6 selection
+flavour (`eager`). The right settings depend on the device, the batch
+bucket, the adjacency fan-out R and the PQ subspace count m -- exactly the
+per-device tile tuning CAGRA-class GPU implementations rely on. This module
+makes that tuning a persisted artifact instead of a per-process guess:
+
+  * `autotune_executor(ex, queries)` sweeps candidate (eager, tile_rows)
+    configs per batch bucket by timing real executor searches in
+    `kernel_mode="fused"` and records each bucket's winner.
+  * `AutotuneCache` persists winners as JSON keyed by
+    `(device kind, bucket, R, m)`. `load()` of a missing/corrupt/
+    wrong-version file falls back to an empty cache (defaults) with a
+    warning -- a bad tuning file can never take serving down.
+  * Executors constructed with `autotune=cache` apply the winner for their
+    `(device kind, bucket, R, m)` *before* the compile-cache key is built
+    (`SearchExecutor._compiled`), so the tuned fields ride the key: a
+    reloaded cache file reproduces the exact same executor compile-cache
+    keys, and differently-tuned configs never share executables.
+  * `setup_xla_flags()` applies the latency-hiding XLA scheduler flags that
+    let the compiled pipeline overlap the DMA/collective traffic the tuned
+    kernel schedules; call it before the first JAX computation (flags are
+    read at backend initialisation).
+
+Schema (version 1)::
+
+    {"version": 1,
+     "winners": {"<device kind>|bucket=<B>|R=<R>|m=<m>":
+                 {"eager": bool, "codes_tile_rows": int,
+                  "per_hop_us": float}}}
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import warnings
+from pathlib import Path
+from typing import Any
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "AutotuneCache",
+    "autotune_key",
+    "autotune_executor",
+    "device_kind",
+    "default_tile_candidates",
+    "setup_xla_flags",
+    "LATENCY_HIDING_XLA_FLAGS",
+]
+
+SCHEMA_VERSION = 1
+
+# Winner entries must carry exactly these fields with these types (bool is
+# checked before int: isinstance(True, int) holds).
+_WINNER_FIELDS = (
+    ("eager", bool),
+    ("codes_tile_rows", int),
+    ("per_hop_us", (int, float)),
+)
+
+# Latency-hiding scheduling: overlap the tuned kernel's DMA/collective
+# traffic with compute at the XLA level too. GPU-prefixed flags are inert on
+# other backends (but must still be *known* to the build: XLA aborts on
+# unknown flags, so only flags the pinned toolchain registers belong here);
+# they are appended (never overwriting caller flags) so an explicit
+# XLA_FLAGS env always wins.
+LATENCY_HIDING_XLA_FLAGS = (
+    "--xla_gpu_enable_latency_hiding_scheduler=true",
+    "--xla_gpu_enable_highest_priority_async_stream=true",
+)
+
+
+def setup_xla_flags(flags: tuple[str, ...] = LATENCY_HIDING_XLA_FLAGS) -> str:
+    """Append missing latency-hiding flags to XLA_FLAGS (idempotent).
+
+    Must run before JAX initialises its backend to take effect; returns the
+    resulting XLA_FLAGS value. Flags already set by the caller (same
+    `--flag=` prefix, any value) are left untouched.
+    """
+    current = os.environ.get("XLA_FLAGS", "")
+    have = {f.split("=", 1)[0] for f in current.split() if f}
+    add = [f for f in flags if f.split("=", 1)[0] not in have]
+    if add:
+        current = " ".join([*current.split(), *add])
+        os.environ["XLA_FLAGS"] = current
+    return current
+
+
+def device_kind() -> str:
+    """The accelerator kind string the winners are keyed by (e.g. "cpu",
+    "TPU v4") -- tunings never migrate across device generations."""
+    import jax
+
+    return str(jax.devices()[0].device_kind)
+
+
+def autotune_key(dev_kind: str, bucket: int, R: int, m: int) -> str:
+    """The JSON winner key: `(device kind, bucket, R, m)` flattened."""
+    return f"{dev_kind}|bucket={int(bucket)}|R={int(R)}|m={int(m)}"
+
+
+def _validate_winner(key: str, entry: Any) -> dict:
+    if not isinstance(entry, dict):
+        raise ValueError(f"winner {key!r} must be an object, got {entry!r}")
+    out = {}
+    for field, typ in _WINNER_FIELDS:
+        if field not in entry:
+            raise ValueError(f"winner {key!r} missing field {field!r}")
+        v = entry[field]
+        if typ is int and isinstance(v, bool):
+            raise ValueError(f"winner {key!r} field {field!r} must be int")
+        if not isinstance(v, typ):
+            raise ValueError(
+                f"winner {key!r} field {field!r} has type "
+                f"{type(v).__name__}, expected {typ}"
+            )
+        out[field] = v
+    if out["codes_tile_rows"] < 0:
+        raise ValueError(f"winner {key!r}: codes_tile_rows must be >= 0")
+    return out
+
+
+class AutotuneCache:
+    """Persisted megakernel tuning winners, keyed (device kind, bucket, R, m).
+
+    Deliberately identity-hashed (no __eq__): `BangIndex.executor` caches
+    executors per configuration object, and two caches with equal contents
+    still denote two tuning artifacts.
+    """
+
+    def __init__(self, winners: dict[str, dict] | None = None) -> None:
+        self.winners: dict[str, dict] = {}
+        for k, v in (winners or {}).items():
+            self.winners[str(k)] = _validate_winner(str(k), v)
+
+    # ------------------------------------------------------------ persistence
+    @classmethod
+    def load(cls, path: str | os.PathLike, *, strict: bool = False
+             ) -> "AutotuneCache":
+        """Load winners from JSON; fall back to defaults on any defect.
+
+        A missing, unreadable, wrong-version or schema-violating file
+        returns an *empty* cache (executors then serve with default
+        configs) and warns -- unless `strict=True`, which raises instead
+        (the CI schema check runs strict).
+        """
+        try:
+            raw = json.loads(Path(path).read_text())
+            if not isinstance(raw, dict):
+                raise ValueError("top level must be an object")
+            if raw.get("version") != SCHEMA_VERSION:
+                raise ValueError(
+                    f"unsupported version {raw.get('version')!r}, "
+                    f"expected {SCHEMA_VERSION}"
+                )
+            winners = raw.get("winners")
+            if not isinstance(winners, dict):
+                raise ValueError("'winners' must be an object")
+            return cls(winners)
+        except (OSError, ValueError, TypeError, KeyError) as e:
+            if strict:
+                raise
+            warnings.warn(
+                f"autotune cache {path}: {e}; falling back to default "
+                "kernel configs",
+                stacklevel=2,
+            )
+            return cls()
+
+    def save(self, path: str | os.PathLike) -> None:
+        Path(path).write_text(json.dumps(
+            {"version": SCHEMA_VERSION, "winners": self.winners},
+            indent=2, sort_keys=True,
+        ))
+
+    # ----------------------------------------------------------------- access
+    def put(
+        self, dev_kind: str, bucket: int, R: int, m: int, *,
+        eager: bool, codes_tile_rows: int, per_hop_us: float,
+    ) -> None:
+        key = autotune_key(dev_kind, bucket, R, m)
+        self.winners[key] = _validate_winner(key, {
+            "eager": bool(eager),
+            "codes_tile_rows": int(codes_tile_rows),
+            "per_hop_us": float(per_hop_us),
+        })
+
+    def lookup(self, dev_kind: str, bucket: int, R: int, m: int
+               ) -> dict | None:
+        return self.winners.get(autotune_key(dev_kind, bucket, R, m))
+
+    def apply(self, cfg, dev_kind: str, bucket: int, R: int, m: int):
+        """The winning SearchConfig for this shape, or `cfg` untouched.
+
+        Executors call this inside `_compiled` *before* building the
+        compile-cache key, so tuned fields key the executable: reloading a
+        saved file reproduces identical keys.
+        """
+        w = self.lookup(dev_kind, bucket, R, m)
+        if w is None:
+            return cfg
+        return dataclasses.replace(
+            cfg, eager=bool(w["eager"]),
+            codes_tile_rows=int(w["codes_tile_rows"]),
+        )
+
+    def __len__(self) -> int:
+        return len(self.winners)
+
+
+# --------------------------------------------------------------------- sweep
+def default_tile_candidates(n: int, m: int) -> tuple[int, ...]:
+    """Candidate `codes_tile_rows` values for an (n, m) codes block.
+
+    0 (auto placement) is always swept. When the block exceeds the VMEM
+    budget, the auto tile size and its pow2 neighbours join the sweep --
+    the tile/grid shape axis of the search space; resident blocks have no
+    tile axis to sweep.
+    """
+    from repro.kernels.search_step.ops import resolve_codes_tiling
+
+    auto = resolve_codes_tiling(n, m, 0)
+    if auto == 0:
+        return (0,)
+    cands = {0, auto}
+    for tile in (auto // 2, auto * 2):
+        if 8 <= tile < n:
+            cands.add(tile)
+    return tuple(sorted(cands))
+
+
+def autotune_executor(
+    ex,
+    queries,
+    *,
+    k: int = 10,
+    t: int = 32,
+    cfg=None,
+    tile_candidates: tuple[int, ...] | None = None,
+    eager_options: tuple[bool, ...] = (True, False),
+    repeats: int = 2,
+    cache: AutotuneCache | None = None,
+) -> AutotuneCache:
+    """Sweep fused-kernel configs on real searches; record the winner.
+
+    Times `ex.search(..., kernel_mode="fused")` for every
+    (eager, codes_tile_rows) candidate on `queries`' batch bucket (one
+    warm-up dispatch per candidate pays its compile, then `repeats` timed
+    runs; best steady-state per-hop wall time wins) and stores the winner
+    under `(device kind, bucket, R, m)` in `cache` (a fresh one when not
+    given). Returns the cache -- `save()` it and hand the reloaded file to
+    executor constructors via `autotune=`.
+    """
+    import numpy as np
+
+    from repro.core.search import SearchConfig
+
+    cache = cache if cache is not None else AutotuneCache()
+    queries = np.asarray(queries, np.float32)
+    cfg = cfg or SearchConfig(t=max(t, k))
+    bucket = ex._bucket_for(queries.shape[0])
+    R, m, block_rows = ex.autotune_shape()
+    if tile_candidates is None:
+        tile_candidates = default_tile_candidates(block_rows, m)
+    dk = device_kind()
+    best = None
+    # The sweep must measure each *explicit* candidate config: suspend the
+    # executor's own winner application (an existing winner would clamp
+    # every candidate back to itself and poison the measurements).
+    saved_autotune = getattr(ex, "_autotune", None)
+    ex._autotune = None
+    try:
+        for eager in eager_options:
+            for tile in tile_candidates:
+                c = dataclasses.replace(
+                    cfg, kernel_mode="fused", eager=eager,
+                    codes_tile_rows=tile,
+                )
+                ex.search(queries, k, t=t, cfg=c)      # warm-up (compiles)
+                per_hop = []
+                for _ in range(max(repeats, 1)):
+                    _, _, stats = ex.search(
+                        queries, k, t=t, cfg=c, return_stats=True
+                    )
+                    per_hop.append(
+                        stats.wall_s / max(stats.n_iters, 1) * 1e6
+                    )
+                score = min(per_hop)
+                if best is None or score < best[0]:
+                    best = (score, eager, tile)
+    finally:
+        ex._autotune = saved_autotune
+    score, eager, tile = best
+    cache.put(
+        dk, bucket, R, m,
+        eager=eager, codes_tile_rows=tile, per_hop_us=score,
+    )
+    return cache

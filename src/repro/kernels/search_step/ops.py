@@ -13,8 +13,19 @@ the staged path bounces the (B, R) candidate tile through HBM at every
 kernel boundary (gathered codes in, ADC distances out/in, sorted tile
 out/in), the fused path reads it exactly once and materialises no
 intermediates.
+
+Beyond VMEM: `resolve_codes_tiling` decides, per codes block, whether the
+fused kernels keep the block VMEM-resident (0) or stream it from HBM through
+the double-buffered DMA pipeline (tile row count > 0). The decision point is
+the VMEM budget (`vmem_budget_bytes`, overridable via the REPRO_VMEM_BUDGET
+env var so tests and benchmarks can force the DMA path on small blocks), or
+an explicit `SearchConfig.codes_tile_rows` -- typically the autotuner's
+winner (`repro.kernels.autotune`). Either way `kernel_mode="fused"` never
+falls back to the staged path.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 
@@ -23,10 +34,52 @@ from repro.kernels.common import interpret_mode
 
 from .ref import step_ref, traverse_ref
 from .search_step import (
+    fused_step_dma_pallas,
     fused_step_pallas,
     fused_traverse_pallas,
+    local_adc_dma_pallas,
     local_adc_pallas,
 )
+
+# Per-core VMEM the resident fused kernels may assume for the codes block
+# (conservative: real TPU cores have 16-128 MiB and the kernel needs head
+# room for the distance table and worklist tiles).
+DEFAULT_VMEM_BUDGET = 16 * 1024 * 1024
+
+# Floor on DMA tile rows: below this the per-tile bookkeeping dominates the
+# copy it hides.
+_MIN_TILE_ROWS = 8
+
+
+def vmem_budget_bytes() -> int:
+    """VMEM budget for the resident codes block (REPRO_VMEM_BUDGET wins)."""
+    env = os.environ.get("REPRO_VMEM_BUDGET")
+    return int(env) if env else DEFAULT_VMEM_BUDGET
+
+
+def resolve_codes_tiling(n: int, m: int, tile_rows: int = 0) -> int:
+    """How the fused kernels should place an (n, m) u8 codes block.
+
+    Returns 0 (keep the block VMEM-resident) or a positive DMA tile row
+    count (stream it from HBM, double-buffered). `tile_rows` > 0 forces an
+    explicit tile size -- the autotuner's knob -- except that a tile
+    covering the whole block degenerates to the resident kernel (a 1-tile
+    pipeline would stream without overlapping anything). `tile_rows` == 0
+    is the auto policy: resident while the block fits `vmem_budget_bytes`,
+    else the largest power-of-two tile whose double buffer fills at most
+    half the budget.
+    """
+    if tile_rows < 0:
+        raise ValueError(f"tile_rows must be >= 0, got {tile_rows}")
+    if tile_rows:
+        return 0 if tile_rows >= n else max(tile_rows, _MIN_TILE_ROWS)
+    budget = vmem_budget_bytes()
+    if n * m <= budget:
+        return 0
+    # 2 tiles (double buffer) x tile_rows x m u8 <= budget / 2.
+    rows = max(budget // (4 * max(m, 1)), _MIN_TILE_ROWS)
+    tile = 1 << (rows.bit_length() - 1)
+    return tile if tile < n else max(_MIN_TILE_ROWS, 1 << ((n - 1).bit_length() - 1))
 
 
 def fused_step(
@@ -38,12 +91,25 @@ def fused_step(
     active: jax.Array,
     *,
     eager: bool = True,
+    tile_rows: int = 0,
 ) -> tuple[Worklist, jax.Array, jax.Array]:
-    """One fused iteration: returns (worklist', u_next (B,), active' (B,))."""
-    d, i, v, u, a = fused_step_pallas(
-        table, codes, nbrs, fresh, wl.dists, wl.ids, wl.visited, active,
-        eager=eager, interpret=interpret_mode(),
-    )
+    """One fused iteration: returns (worklist', u_next (B,), active' (B,)).
+
+    `tile_rows` follows `resolve_codes_tiling`: 0 auto-places the codes
+    block (VMEM-resident while it fits the budget, DMA-pipelined beyond),
+    > 0 forces that DMA tile size. Both placements are bit-identical.
+    """
+    tr = resolve_codes_tiling(codes.shape[0], codes.shape[1], tile_rows)
+    if tr:
+        d, i, v, u, a = fused_step_dma_pallas(
+            table, codes, nbrs, fresh, wl.dists, wl.ids, wl.visited, active,
+            eager=eager, tile_rows=tr, interpret=interpret_mode(),
+        )
+    else:
+        d, i, v, u, a = fused_step_pallas(
+            table, codes, nbrs, fresh, wl.dists, wl.ids, wl.visited, active,
+            eager=eager, interpret=interpret_mode(),
+        )
     return Worklist(d, i, v), u, a
 
 
@@ -64,9 +130,26 @@ def fused_traverse(
 
 
 def local_adc(
-    table: jax.Array, codes_local: jax.Array, rel: jax.Array, own: jax.Array
+    table: jax.Array,
+    codes_local: jax.Array,
+    rel: jax.Array,
+    own: jax.Array,
+    *,
+    tile_rows: int = 0,
 ) -> jax.Array:
-    """Owner-shard fused gather+ADC: (B, R) contributions, 0 where not owned."""
+    """Owner-shard fused gather+ADC: (B, R) contributions, 0 where not owned.
+
+    `tile_rows` places the shard's codes block exactly like `fused_step`:
+    the sharded fused mode stays beyond-VMEM capable too.
+    """
+    tr = resolve_codes_tiling(
+        codes_local.shape[0], codes_local.shape[1], tile_rows
+    )
+    if tr:
+        return local_adc_dma_pallas(
+            table, codes_local, rel, own, tile_rows=tr,
+            interpret=interpret_mode(),
+        )
     return local_adc_pallas(
         table, codes_local, rel, own, interpret=interpret_mode()
     )
@@ -104,6 +187,27 @@ def hbm_intermediate_bytes_per_hop(
     return gathered_codes + adc_out + sorted_tile
 
 
+def hbm_codes_stream_bytes_per_hop(
+    mode: str, batch: int, n: int, m: int, tile_rows: int = 0
+) -> int:
+    """HBM bytes of *code rows* one hop streams for the beyond-VMEM lane.
+
+    The DMA-pipelined fused kernel reads the full (n, m) u8 block per
+    program (every tile crosses once, double-buffered, overlapped with the
+    ADC); the VMEM-resident fused kernel pays the same logical read when
+    its block is first staged. staged/reference instead gather only the
+    (B, R, m) candidate rows -- already counted by
+    `hbm_intermediate_bytes_per_hop` -- so this lane reports 0 for them:
+    the two estimates partition the traffic, they never double-count.
+    """
+    if mode != "fused":
+        return 0
+    if tile_rows:
+        num_tiles = -(-n // tile_rows)
+        return batch * num_tiles * tile_rows * m
+    return batch * n * m
+
+
 __all__ = [
     "fused_step",
     "fused_traverse",
@@ -112,4 +216,8 @@ __all__ = [
     "traverse_ref",
     "hbm_candidate_roundtrips_per_hop",
     "hbm_intermediate_bytes_per_hop",
+    "hbm_codes_stream_bytes_per_hop",
+    "resolve_codes_tiling",
+    "vmem_budget_bytes",
+    "DEFAULT_VMEM_BUDGET",
 ]

@@ -26,12 +26,19 @@ The compute helpers are shared with the standalone kernels
 (`pq_adc.onehot_adc_accumulate`, `bitonic.bitonic_stages`): the megakernel
 changes the schedule, not the math.
 
-VMEM sizing: the codes block (n, m) u8 rides along each program. On real
-hardware that bounds n to the VMEM budget -- which is exactly the sharded
-deployment's shape (codes row-sharded over `model`, n_loc per shard); the
-mesh path therefore uses `_local_adc_kernel` (same gather + contraction on
-the shard's own rows, ownership-masked) + psum, followed by the traverse-only
-kernel on the psum-reconstructed distances.
+VMEM sizing: the resident kernels (`fused_step_pallas`, `local_adc_pallas`)
+ride the whole (n, m) u8 codes block along each program, which bounds n to
+the VMEM budget. Beyond that budget the *DMA-pipelined* variants
+(`fused_step_dma_pallas`, `local_adc_dma_pallas`) keep the codes block in
+HBM (`memory_space=ANY`) and stream it through a double-buffered
+(2, tile_rows, m) VMEM scratch with explicit async copies: the DMA for code
+tile i+1 is started before the ADC contraction on tile i runs, so the copy
+hides behind compute and `kernel_mode="fused"` never has to fall back to the
+staged path on large shards. Bit-exactness is preserved because each
+candidate lane's distance is produced by the *identical*
+`onehot_adc_accumulate` op sequence on the one tile that owns its code row
+(a lane belongs to exactly one tile; the per-tile results are merged with a
+select, never re-accumulated).
 """
 from __future__ import annotations
 
@@ -40,6 +47,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.bitonic.bitonic import bitonic_stages
 from repro.kernels.common import next_pow2
@@ -169,6 +177,105 @@ def _local_adc_kernel(table_ref, codes_ref, rel_ref, own_ref, out_ref):
     out_ref[0, :] = jnp.where(own, acc, 0.0)
 
 
+def _dma_tiled_adc(table_ref, codes_hbm_ref, safe, *, tile_rows, num_tiles):
+    """Double-buffered DMA ADC over an HBM-resident codes block.
+
+    Streams (tile_rows, m) u8 code tiles from `codes_hbm_ref` (memory_space
+    ANY) through a 2-slot VMEM scratch: the async copy of tile i+1 is
+    started *before* the one-hot ADC contraction on tile i, so on hardware
+    the HBM fetch hides behind the MXU work. Returns (R,) f32 accumulated
+    distances for the candidate ids in `safe`.
+
+    Bit-exactness contract: each lane's id falls in exactly one tile, and
+    that tile runs the full `onehot_adc_accumulate` op sequence on the
+    lane's gathered row -- identical to the VMEM-resident kernel's single
+    accumulate -- then a `where` selects it. No partial sums ever merge, so
+    the result is bitwise equal to `_fused_step_kernel`'s.
+    """
+    R = safe.shape[0]
+    m = table_ref.shape[1]
+
+    def scoped(tiles, sem):
+        def tile_copy(i, slot):
+            return pltpu.make_async_copy(
+                codes_hbm_ref.at[pl.ds(i * tile_rows, tile_rows), :],
+                tiles.at[slot],
+                sem.at[slot],
+            )
+
+        tile_copy(0, 0).start()
+
+        def loop(i, acc):
+            slot = jax.lax.rem(i, 2)
+
+            @pl.when(i + 1 < num_tiles)
+            def _():
+                tile_copy(i + 1, 1 - slot).start()
+
+            tile_copy(i, slot).wait()
+            lo = i * tile_rows
+            in_tile = (safe >= lo) & (safe < lo + tile_rows)
+            rel = jnp.where(in_tile, safe - lo, 0)
+            rows = jnp.take(tiles[slot], rel, axis=0).astype(jnp.int32)
+            tile_acc = onehot_adc_accumulate(table_ref[0], rows)    # (R,)
+            return jnp.where(in_tile, tile_acc, acc)
+
+        return jax.lax.fori_loop(
+            0, num_tiles, loop, jnp.zeros((R,), jnp.float32)
+        )
+
+    return pl.run_scoped(
+        scoped,
+        pltpu.VMEM((2, tile_rows, m), jnp.uint8),
+        pltpu.SemaphoreType.DMA((2,)),
+    )
+
+
+def _fused_step_dma_kernel(
+    table_ref, codes_hbm_ref, nbr_ref, fresh_ref, wld_ref, wli_ref, wlv_ref,
+    act_ref, owd_ref, owi_ref, owv_ref, un_ref, oact_ref,
+    *, eager: bool, t: int, tile_rows: int, num_tiles: int,
+):
+    # Beyond-VMEM megakernel: same per-program iteration body as
+    # `_fused_step_kernel`, but the codes block stays in HBM and streams
+    # through the double-buffered DMA pipeline above.
+    nbrs = nbr_ref[0, :]
+    fresh = fresh_ref[0, :] > 0
+    safe = jnp.where(fresh, nbrs, 0)
+    acc = _dma_tiled_adc(
+        table_ref, codes_hbm_ref, safe, tile_rows=tile_rows,
+        num_tiles=num_tiles,
+    )
+    cd = jnp.where(fresh, acc, jnp.inf)[None, :]
+    ci = jnp.where(fresh, nbrs, 2**31 - 1)[None, :]
+    d, i, v, u, a = _traverse_math(
+        wld_ref[...], wli_ref[...], wlv_ref[...], cd, ci, act_ref[...],
+        eager=eager, t=t,
+    )
+    owd_ref[...] = d
+    owi_ref[...] = i
+    owv_ref[...] = v
+    un_ref[0, 0] = u[0]
+    oact_ref[0, 0] = a[0].astype(jnp.int32)
+
+
+def _local_adc_dma_kernel(
+    table_ref, codes_hbm_ref, rel_ref, own_ref, out_ref,
+    *, tile_rows: int, num_tiles: int,
+):
+    # Beyond-VMEM owner-shard ADC: shard-relative ids against the shard's
+    # HBM-resident codes block, streamed through the same DMA pipeline.
+    # Non-owned lanes point at row 0 (never selected) and contribute 0.0,
+    # exactly like `_local_adc_kernel`.
+    own = own_ref[0, :] > 0
+    safe = jnp.where(own, rel_ref[0, :], 0)
+    acc = _dma_tiled_adc(
+        table_ref, codes_hbm_ref, safe, tile_rows=tile_rows,
+        num_tiles=num_tiles,
+    )
+    out_ref[0, :] = jnp.where(own, acc, 0.0)
+
+
 def _pad_m(table, codes):
     """Pad the subspace axis to a multiple of MC (zero rows are neutral)."""
     m = table.shape[1]
@@ -207,6 +314,85 @@ def fused_step_pallas(
         in_specs=[
             pl.BlockSpec((1, m, 256), lambda b: (b, 0, 0)),
             pl.BlockSpec((n, m), lambda b: (0, 0)),   # VMEM-resident codes
+            pl.BlockSpec((1, R), lambda b: (b, 0)),
+            pl.BlockSpec((1, R), lambda b: (b, 0)),
+            pl.BlockSpec((1, t), lambda b: (b, 0)),
+            pl.BlockSpec((1, t), lambda b: (b, 0)),
+            pl.BlockSpec((1, t), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, t), lambda b: (b, 0)),
+            pl.BlockSpec((1, t), lambda b: (b, 0)),
+            pl.BlockSpec((1, t), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, t), jnp.float32),
+            jax.ShapeDtypeStruct((B, t), jnp.int32),
+            jax.ShapeDtypeStruct((B, t), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        table,
+        codes,
+        nbrs.astype(jnp.int32),
+        fresh.astype(jnp.int32),
+        wld.astype(jnp.float32),
+        wli.astype(jnp.int32),
+        wlv.astype(jnp.int32),
+        active.astype(jnp.int32)[:, None],
+    )
+    d, i, v, u, a = out
+    return d, i, v.astype(jnp.bool_), u[:, 0], a[:, 0].astype(jnp.bool_)
+
+
+def _pad_tiles(codes, tile_rows):
+    """Pad codes rows up to a tile multiple (pad rows are never gathered:
+    candidate ids are always < n, and out-of-tile lanes select row 0)."""
+    n = codes.shape[0]
+    num_tiles = -(-n // tile_rows)
+    pad = num_tiles * tile_rows - n
+    if pad:
+        codes = jnp.pad(codes, ((0, pad), (0, 0)))
+    return codes, num_tiles
+
+
+@functools.partial(jax.jit, static_argnames=("eager", "tile_rows", "interpret"))
+def fused_step_dma_pallas(
+    table: jax.Array,    # (B, m, 256) f32
+    codes: jax.Array,    # (n, m) uint8 -- stays in HBM, streamed by tile
+    nbrs: jax.Array,     # (B, R) i32 candidate ids (post bloom)
+    fresh: jax.Array,    # (B, R) bool
+    wld: jax.Array,      # (B, t) f32
+    wli: jax.Array,      # (B, t) i32
+    wlv: jax.Array,      # (B, t) bool
+    active: jax.Array,   # (B,) bool
+    *,
+    eager: bool = True,
+    tile_rows: int,
+    interpret: bool = True,
+):
+    """Beyond-VMEM fused step: codes block in HBM, DMA-pipelined by tile."""
+    if tile_rows < 1:
+        raise ValueError(f"tile_rows must be >= 1, got {tile_rows}")
+    B, t = wld.shape
+    R = nbrs.shape[1]
+    table, codes = _pad_m(table.astype(jnp.float32), codes)
+    m = table.shape[1]
+    codes, num_tiles = _pad_tiles(codes, tile_rows)
+    out = pl.pallas_call(
+        functools.partial(
+            _fused_step_dma_kernel, eager=eager, t=t, tile_rows=tile_rows,
+            num_tiles=num_tiles,
+        ),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, m, 256), lambda b: (b, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),     # codes stay in HBM
             pl.BlockSpec((1, R), lambda b: (b, 0)),
             pl.BlockSpec((1, R), lambda b: (b, 0)),
             pl.BlockSpec((1, t), lambda b: (b, 0)),
@@ -309,6 +495,40 @@ def local_adc_pallas(
         in_specs=[
             pl.BlockSpec((1, m, 256), lambda b: (b, 0, 0)),
             pl.BlockSpec((n_loc, m), lambda b: (0, 0)),
+            pl.BlockSpec((1, R), lambda b: (b, 0)),
+            pl.BlockSpec((1, R), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, R), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, R), jnp.float32),
+        interpret=interpret,
+    )(table, codes_local, rel.astype(jnp.int32), own.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("tile_rows", "interpret"))
+def local_adc_dma_pallas(
+    table: jax.Array,        # (B, m, 256) f32
+    codes_local: jax.Array,  # (n_loc, m) uint8 -- stays in HBM
+    rel: jax.Array,          # (B, R) i32 shard-relative ids
+    own: jax.Array,          # (B, R) bool ownership mask
+    *,
+    tile_rows: int,
+    interpret: bool = True,
+):
+    """Beyond-VMEM owner-shard ADC: shard codes in HBM, DMA-pipelined."""
+    if tile_rows < 1:
+        raise ValueError(f"tile_rows must be >= 1, got {tile_rows}")
+    B, R = rel.shape
+    table, codes_local = _pad_m(table.astype(jnp.float32), codes_local)
+    m = table.shape[1]
+    codes_local, num_tiles = _pad_tiles(codes_local, tile_rows)
+    return pl.pallas_call(
+        functools.partial(
+            _local_adc_dma_kernel, tile_rows=tile_rows, num_tiles=num_tiles
+        ),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, m, 256), lambda b: (b, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),     # codes stay in HBM
             pl.BlockSpec((1, R), lambda b: (b, 0)),
             pl.BlockSpec((1, R), lambda b: (b, 0)),
         ],

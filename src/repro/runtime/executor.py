@@ -71,8 +71,21 @@ Array = jax.Array
 VARIANTS = ("inmem", "base", "exact")
 
 
+def _validate_min_bucket(min_bucket: int) -> int:
+    """min_bucket must be a positive power of two: the bucket lattice is
+    pow2, so a non-pow2 floor would emit misaligned buckets (e.g. 12, then
+    16 for batch 13) whose executables duplicate cache entries without ever
+    being shape-compatible."""
+    if min_bucket < 1 or (min_bucket & (min_bucket - 1)):
+        raise ValueError(
+            f"min_bucket must be a positive power of two, got {min_bucket}"
+        )
+    return min_bucket
+
+
 def bucket_size(batch: int, *, min_bucket: int = 8) -> int:
     """Next power-of-two shape bucket holding `batch` queries."""
+    _validate_min_bucket(min_bucket)
     if batch <= 0:
         raise ValueError(f"batch must be positive, got {batch}")
     return max(min_bucket, 1 << (batch - 1).bit_length())
@@ -124,6 +137,7 @@ class SearchExecutor:
         min_bucket: int = 8,
         hostio: HostIOConfig | None = None,
         with_tombstones: bool = False,
+        autotune=None,
     ) -> None:
         if variant not in VARIANTS:
             raise ValueError(f"unknown variant {variant!r}, expected one of {VARIANTS}")
@@ -167,17 +181,23 @@ class SearchExecutor:
                 else jnp.asarray(graph.adjacency)
             )
             self._adjacency_np = None
-        self._init_serving_state(min_bucket)
+        self._init_serving_state(min_bucket, autotune)
 
-    def _init_serving_state(self, min_bucket: int) -> None:
+    def _init_serving_state(self, min_bucket: int, autotune=None) -> None:
         """Shared dispatch/finish bookkeeping; both executor classes call it.
 
         Host-I/O state (`_hostio`/`hostio_runtime`/`_exchange`) is NOT set
         here: each constructor assigns it explicitly before (and, for the
         host-graph variants, after) this call, so a future constructor that
         forgets it fails fast instead of silently serving without a service.
+
+        `autotune` is a `repro.kernels.autotune.AutotuneCache` (or None):
+        its winner for this executor's (device kind, bucket, R, m) is
+        applied onto the SearchConfig in `_compiled`, *before* the
+        compile-cache key is built.
         """
-        self._min_bucket = min_bucket
+        self._min_bucket = _validate_min_bucket(min_bucket)
+        self._autotune = autotune
         self._cache: dict[Any, Any] = {}
         self.trace_counts: dict[Any, int] = {}
         self.compile_s_total = 0.0
@@ -209,6 +229,22 @@ class SearchExecutor:
         rt = self.hostio_runtime
         return None if rt is None else rt.service
 
+    def autotune_shape(self) -> tuple[int, int, int]:
+        """(R, m, codes_block_rows): the shape axes autotune winners key on.
+
+        `codes_block_rows` is the row count of the codes block one fused
+        kernel instance sees -- the full index here; the sharded subclass
+        reports the per-model-shard block.
+        """
+        adj = (
+            self._adjacency_np if self._adjacency is None else self._adjacency
+        )
+        return (
+            int(adj.shape[1]),
+            int(self._codes.shape[1]),
+            int(self._codes.shape[0]),
+        )
+
     # ------------------------------------------------------------- compiling
     def _compiled(self, bucket: int, d: int, k: int, rerank: bool,
                   cfg: SearchConfig):
@@ -218,7 +254,21 @@ class SearchExecutor:
         (worker pool, hot cache, prefetch) is fixed at construction, but
         keying it keeps executables from ever being confused across
         executors whose caches are merged or persisted externally.
+
+        With an `autotune=` cache, the winner for this executor's
+        `(device kind, bucket, R, m)` replaces the tuned SearchConfig
+        fields (eager, codes_tile_rows) *here*, before the key is built:
+        the tuned config IS the cache key, so reloading a persisted winners
+        file reproduces identical executable keys, and an untuned shape
+        falls through with `cfg` untouched.
         """
+        if self._autotune is not None:
+            from repro.kernels import autotune as autotune_lib
+
+            R, m, _ = self.autotune_shape()
+            cfg = self._autotune.apply(
+                cfg, autotune_lib.device_kind(), bucket, R, m
+            )
         key = (bucket, d, k, rerank, cfg, self._hostio, self._with_tombstones)
         entry = self._cache.get(key)
         if entry is not None:

@@ -59,7 +59,11 @@ class HotAdjacencyCache:
         hot = order[:n_rows].astype(np.int32)
         if medoid is not None and medoid not in hot:
             # The medoid is every query's first expansion: always cache it.
-            hot = np.concatenate([[np.int32(medoid)], hot[: n_rows - 1]])
+            # (int32 array, not a Python list: list concat would promote the
+            # whole hot_ids vector to int64 on this path only.)
+            hot = np.concatenate(
+                [np.array([medoid], np.int32), hot[: n_rows - 1]]
+            )
         slot_of = np.full(n, -1, np.int32)
         slot_of[hot] = np.arange(len(hot), dtype=np.int32)
         self.n = n

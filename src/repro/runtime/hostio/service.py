@@ -169,12 +169,18 @@ class NeighborService:
             fn = item
             try:
                 fn()
-            except Exception as e:  # pragma: no cover - defensive
+            except Exception as e:
                 # Work items release their own latches in finally blocks, so
                 # nothing deadlocks; keep the worker alive for later requests
                 # (the failed request surfaces through its own result path).
+                # The failure is *observable*: it bumps the worker_errors
+                # counter and pins the message into the stats() snapshot
+                # (and so into ServeStats.hostio), not just stderr.
                 import sys
 
+                with self._lock:
+                    self._bump_locked(worker_errors=1)
+                    self._last_worker_error = f"{type(e).__name__}: {e}"
                 print(f"[{self.name}] worker error: {e!r}", file=sys.stderr)
             finally:
                 q.task_done()
@@ -191,11 +197,13 @@ class NeighborService:
                 "prefetch_hits": 0,
                 "prefetch_misses": 0,
                 "prefetch_lane_mismatches": 0,
+                "worker_errors": 0,
                 "max_queue_depth": 0,
                 "gather_s_total": 0.0,
                 "gather_s_hidden": 0.0,
                 "latency_s_total": 0.0,
             }
+            self._last_worker_error: str | None = None
 
     def _bump_locked(self, **kw) -> None:
         """Counter update; caller must hold self._lock (it is not reentrant)."""
@@ -209,13 +217,21 @@ class NeighborService:
         with self._lock:
             self._bump_locked(**kw)
 
+    @staticmethod
+    def _hit_rate_of(c: dict) -> float:
+        total = c["cache_hit_lanes"] + c["host_miss_lanes"]
+        return c["cache_hit_lanes"] / total if total else 0.0
+
+    @staticmethod
+    def _overlap_of(c: dict) -> float:
+        total = c["gather_s_total"]
+        return min(c["gather_s_hidden"] / total, 1.0) if total > 0 else 0.0
+
     def cache_hit_rate(self) -> float:
         """Measured hot-cache hit rate over all lanes that needed a row."""
         with self._lock:
-            hits = self._c["cache_hit_lanes"]
-            misses = self._c["host_miss_lanes"]
-        total = hits + misses
-        return hits / total if total else 0.0
+            c = dict(self._c)
+        return self._hit_rate_of(c)
 
     def overlap_fraction(self) -> float:
         """Share of host gather time hidden behind device compute.
@@ -226,21 +242,30 @@ class NeighborService:
         0.0 when nothing was prefetched.
         """
         with self._lock:
-            total = self._c["gather_s_total"]
-            hidden = self._c["gather_s_hidden"]
-        return min(hidden / total, 1.0) if total > 0 else 0.0
+            c = dict(self._c)
+        return self._overlap_of(c)
 
     def stats(self) -> dict:
-        """Snapshot of the cumulative counters (JSON-serialisable)."""
+        """Snapshot of the cumulative counters (JSON-serialisable).
+
+        Every derived ratio is computed from the one counter copy taken
+        under the lock, so a snapshot is internally consistent even under
+        concurrent traffic -- the reported cache_hit_rate always equals
+        cache_hit_lanes / (cache_hit_lanes + host_miss_lanes) of the *same*
+        dict (re-reading the live counters per ratio could not promise
+        that).
+        """
         with self._lock:
             c = dict(self._c)
+            last_error = self._last_worker_error
         n = max(c["requests"], 1)
         return {
             **{k: v for k, v in c.items()
                if k not in ("gather_s_total", "gather_s_hidden")},
             "mean_latency_ms": c["latency_s_total"] / n * 1e3,
-            "cache_hit_rate": self.cache_hit_rate(),
-            "overlap_fraction": self.overlap_fraction(),
+            "cache_hit_rate": self._hit_rate_of(c),
+            "overlap_fraction": self._overlap_of(c),
+            "last_worker_error": last_error,
             "workers": self.workers,
             "partitions": len(self._parts),
         }

@@ -186,9 +186,10 @@ class ServePipeline:
         """LRU hit for one query row (exact byte match), or None."""
         if self._result_cache_size == 0:
             return None
-        hit = self._result_cache.get(row.tobytes())
+        key = row.tobytes()          # one serialisation per lookup, hit or not
+        hit = self._result_cache.get(key)
         if hit is not None:
-            self._result_cache.move_to_end(row.tobytes())
+            self._result_cache.move_to_end(key)
         return hit
 
     def _cache_insert(self, queries: np.ndarray, ids, dists) -> None:

@@ -99,6 +99,7 @@ class ShardedSearchExecutor(SearchExecutor):
         min_bucket: int = 8,
         hostio: HostIOConfig | None = None,
         with_tombstones: bool = False,
+        autotune=None,
     ) -> None:
         if variant not in SHARDED_VARIANTS:
             raise ValueError(
@@ -130,7 +131,7 @@ class ShardedSearchExecutor(SearchExecutor):
         self._with_tombstones = with_tombstones
         self.hostio_runtime = None
         self._exchange = (None, None)
-        self._init_serving_state(min_bucket)
+        self._init_serving_state(min_bucket, autotune)
 
         S = mesh.shape[model_axis]
         self.n_model_shards = S
@@ -183,6 +184,14 @@ class ShardedSearchExecutor(SearchExecutor):
         return cls(
             index.codec, index.codes, index.graph, mesh,
             data=index.data_np, **kw,
+        )
+
+    def autotune_shape(self) -> tuple[int, int, int]:
+        """(R, m, per-shard codes rows): one fused local_adc kernel's view."""
+        return (
+            self.R,
+            int(self._codes.shape[1]),
+            int(self._codes.shape[0]) // self.n_model_shards,
         )
 
     # ------------------------------------------------------------- compiling

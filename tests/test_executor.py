@@ -23,6 +23,24 @@ def test_bucket_size_powers_of_two():
         bucket_size(0)
 
 
+@pytest.mark.parametrize("bad", [0, -8, 3, 12, 1000])
+def test_min_bucket_must_be_positive_pow2(bad, small_ann_index):
+    """Regression: a non-power-of-two min_bucket would silently corrupt the
+    bucket lattice (compile-cache keys and pad_batch disagree); both the
+    free function and the executor constructors reject it up front."""
+    _, idx = small_ann_index
+    with pytest.raises(ValueError, match="power of two"):
+        bucket_size(4, min_bucket=bad)
+    with pytest.raises(ValueError, match="power of two"):
+        SearchExecutor.from_index(idx, variant="inmem", min_bucket=bad)
+
+
+def test_min_bucket_pow2_accepted(small_ann_index):
+    _, idx = small_ann_index
+    ex = SearchExecutor.from_index(idx, variant="inmem", min_bucket=16)
+    assert ex._bucket_for(3) == 16
+
+
 def test_pad_batch_replicates_last_row(rng):
     q = rng.standard_normal((5, 8)).astype(np.float32)
     p = pad_batch(q, 8)

@@ -122,10 +122,12 @@ def _random_step_inputs(rng, B, R, t, m, n):
     return table, codes, nbrs, fresh, wl, active
 
 
-def _assert_step_matches_oracle(table, codes, nbrs, fresh, wl, active, eager):
+def _assert_step_matches_oracle(table, codes, nbrs, fresh, wl, active, eager,
+                                tile_rows=0):
     from repro.kernels.search_step import ops
 
-    wl2, u, a = ops.fused_step(table, codes, wl, nbrs, fresh, active, eager=eager)
+    wl2, u, a = ops.fused_step(table, codes, wl, nbrs, fresh, active,
+                               eager=eager, tile_rows=tile_rows)
     rd, ri, rv, ru, ra = ops.step_ref(
         table, codes, nbrs, fresh, wl.dists, wl.ids, wl.visited, active,
         eager=eager,
@@ -286,3 +288,157 @@ def test_bench_kernel_row_json_schema():
         rows["fused"]["hbm_intermediate_bytes_per_hop"]
         < rows["staged"]["hbm_intermediate_bytes_per_hop"]
     )
+
+
+# ------------------------------------------------ beyond-VMEM DMA pipeline
+def test_resolve_codes_tiling_policy(monkeypatch):
+    from repro.kernels.search_step import ops
+
+    # Resident while the block fits the default budget.
+    assert ops.resolve_codes_tiling(1200, 8) == 0
+    # Explicit tile: the autotuner's knob, floored at the minimum; a tile
+    # covering the whole block degenerates to the resident kernel.
+    assert ops.resolve_codes_tiling(1200, 8, 64) == 64
+    assert ops.resolve_codes_tiling(1200, 8, 3) == 8
+    assert ops.resolve_codes_tiling(1200, 8, 1200) == 0
+    assert ops.resolve_codes_tiling(1200, 8, 5000) == 0
+    with pytest.raises(ValueError, match="tile_rows"):
+        ops.resolve_codes_tiling(1200, 8, -1)
+    # Auto beyond the budget: a power-of-two tile whose double buffer fits
+    # half the (env-forced) budget, never the whole block.
+    monkeypatch.setenv("REPRO_VMEM_BUDGET", "2048")
+    tile = ops.resolve_codes_tiling(1200, 8)
+    assert tile > 0 and tile & (tile - 1) == 0 and tile < 1200
+    assert 2 * tile * 8 <= 2048
+    assert ops.vmem_budget_bytes() == 2048
+
+
+@pytest.mark.parametrize("tile_rows", [8, 16, 64, 100, 119])
+@pytest.mark.parametrize("eager", [True, False])
+def test_fused_step_dma_matches_resident(tile_rows, eager, rng):
+    """The DMA-pipelined megakernel is bit-identical to the VMEM-resident
+    one (and hence the ref.py oracle) for divisor, non-divisor and
+    near-whole-block tile sizes -- every candidate lane's distance comes
+    from its single owning tile, so no partial sums ever merge."""
+    from repro.kernels.common import interpret_mode
+    from repro.kernels.search_step.search_step import (
+        fused_step_dma_pallas, fused_step_pallas,
+    )
+
+    table, codes, nbrs, fresh, wl, active = _random_step_inputs(
+        rng, 4, 17, 24, 9, 120
+    )
+    res = fused_step_pallas(
+        table, codes, nbrs, fresh, wl.dists, wl.ids, wl.visited, active,
+        eager=eager, interpret=interpret_mode(),
+    )
+    dma = fused_step_dma_pallas(
+        table, codes, nbrs, fresh, wl.dists, wl.ids, wl.visited, active,
+        eager=eager, tile_rows=tile_rows, interpret=interpret_mode(),
+    )
+    for a, b in zip(res, dma):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("tile_rows", [8, 32, 100])
+def test_local_adc_dma_matches_resident(tile_rows, rng):
+    """Sharded owner-shard fused gather+ADC: DMA placement bit-identical."""
+    from repro.kernels.common import interpret_mode
+    from repro.kernels.search_step.search_step import (
+        local_adc_dma_pallas, local_adc_pallas,
+    )
+
+    B, R, m, n_loc = 5, 13, 9, 120
+    table = jnp.asarray(rng.integers(0, 1000, (B, m, 256)).astype(np.float32))
+    codes = jnp.asarray(rng.integers(0, 256, (n_loc, m)).astype(np.uint8))
+    rel = jnp.asarray(rng.integers(0, n_loc, (B, R)).astype(np.int32))
+    own = jnp.asarray(rng.random((B, R)) > 0.4)
+    res = local_adc_pallas(table, codes, rel, own, interpret=interpret_mode())
+    dma = local_adc_dma_pallas(
+        table, codes, rel, own, tile_rows=tile_rows,
+        interpret=interpret_mode(),
+    )
+    np.testing.assert_array_equal(np.asarray(res), np.asarray(dma))
+
+
+@pytest.mark.parametrize("tile_rows", [0, 16, 90])
+@pytest.mark.parametrize("eager", [True, False])
+def test_fused_step_tile_rows_dispatch_bit_exact(tile_rows, eager, rng,
+                                                 monkeypatch):
+    """ops.fused_step under a tiny VMEM budget (auto DMA) or an explicit
+    tile matches the oracle bitwise -- the public dispatch layer."""
+    monkeypatch.setenv("REPRO_VMEM_BUDGET", "256")   # 120*9 codes > 256
+    table, codes, nbrs, fresh, wl, active = _random_step_inputs(
+        rng, 3, 11, 16, 9, 120
+    )
+    from repro.kernels.search_step import ops
+
+    assert ops.resolve_codes_tiling(120, 9, tile_rows) > 0
+    _assert_step_matches_oracle(table, codes, nbrs, fresh, wl, active, eager,
+                                tile_rows=tile_rows)
+
+
+@pytest.mark.parametrize("variant", ["inmem", "base", "sharded",
+                                     "sharded-base", "exact"])
+def test_beyond_vmem_executor_parity(small_ann_index, variant, rng,
+                                     monkeypatch):
+    """Acceptance: with the codes block forced past the VMEM budget, fused
+    engages the DMA pipeline (never a staged fallback) on every serving
+    variant and returns bit-identical ids vs staged and reference; fused
+    dists are bitwise equal to staged (identical op sequence). Fresh
+    executors per mode so the forced budget governs every compile."""
+    from repro.core import SearchConfig
+    from repro.kernels.search_step import ops as step_ops
+    from repro.runtime import SearchExecutor, ShardedSearchExecutor
+
+    monkeypatch.setenv("REPRO_VMEM_BUDGET", "2048")
+    data, idx = small_ann_index
+    n, m = idx.codes.shape
+    assert n * m > 2048 and step_ops.resolve_codes_tiling(n, m) > 0
+    queries = rng.standard_normal((6, data.shape[1])).astype(np.float32)
+    cfg = SearchConfig(t=16, bloom_z=4096)
+    out = {}
+    for mode in KERNEL_MODES:
+        if variant.startswith("sharded"):
+            from repro.compat import make_mesh
+
+            mesh = make_mesh((1, len(jax.devices())), ("data", "model"))
+            ex = ShardedSearchExecutor.from_index(idx, mesh, variant=variant)
+        else:
+            ex = SearchExecutor.from_index(idx, variant=variant)
+        ids, dists = ex.search(queries, 5, cfg=cfg, kernel_mode=mode)
+        out[mode] = (np.asarray(ids), np.asarray(dists))
+    for mode in ("staged", "fused"):
+        np.testing.assert_array_equal(out[mode][0], out["reference"][0])
+    if variant != "exact":
+        # exact's fused/staged differ only in traversal schedule; the PQ
+        # variants' fused ADC shares staged's op sequence bit-for-bit.
+        np.testing.assert_array_equal(out["fused"][1], out["staged"][1])
+
+
+def test_hbm_codes_stream_accounting():
+    """The DMA lane's analytic codes-stream traffic: fused streams the
+    padded block once per hop per query, other modes report 0 (their codes
+    traffic is inside the candidate-roundtrip/intermediate terms)."""
+    from repro.kernels.search_step import ops
+
+    B, n, m = 16, 8000, 16
+    assert ops.hbm_codes_stream_bytes_per_hop("staged", B, n, m, 64) == 0
+    assert ops.hbm_codes_stream_bytes_per_hop("reference", B, n, m, 64) == 0
+    # Resident fused block: the same logical whole-block read, unpadded.
+    assert ops.hbm_codes_stream_bytes_per_hop("fused", B, n, m, 0) == B * n * m
+    streamed = ops.hbm_codes_stream_bytes_per_hop("fused", B, n, m, 64)
+    num_tiles = -(-n // 64)
+    assert streamed == B * num_tiles * 64 * m
+    # Padding only: the DMA stream never exceeds one extra tile per program.
+    assert B * n * m <= streamed <= B * (n + 64) * m
+
+
+def test_bench_beyond_vmem_row_json_schema():
+    if REPO not in sys.path:
+        sys.path.insert(0, REPO)
+    from benchmarks.bench_kernels import BEYOND_VMEM_ROW_SCHEMA
+
+    assert {"per_hop_us", "codes_tile_rows", "num_tiles",
+            "vmem_budget_bytes", "hbm_codes_stream_bytes_per_hop",
+            } <= set(BEYOND_VMEM_ROW_SCHEMA)
