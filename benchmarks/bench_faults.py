@@ -1,0 +1,199 @@
+"""Fault-schedule serving bench: recall / tail latency / shed rate per phase.
+
+Production serving means surviving the host tier misbehaving, and the
+numbers that matter are *during* the fault: what recall does degraded-mode
+serving hold, what does hedging do to p95, how much load does admission
+control shed, and is the post-recovery result really bit-exact vs the
+fault-free run. This bench drives one `ServePipeline` (BANG "base": graph
+in host RAM behind the multi-worker `NeighborService`) through a scripted
+schedule of `repro.runtime.resilience` fault phases and emits one
+machine-readable `ROWJSON,<FAULT_ROW_SCHEMA>` record per phase:
+
+    healthy          baseline (no injector, all partitions up)
+    transient        injected transient gather errors -> retry/backoff
+    stalled          injected worker stalls -> hedged inline re-issue
+    degraded         host partition marked down, no replica -> hot-cache +
+                     medoid-restart serving (the recall-impact phase)
+    failover         partition down but replica pinned -> bit-exact reads
+                     from surviving workers
+    recovered        partition recovered -> primary reads, bit-exact
+    overload         closed admission: bounded queue + tight per-request
+                     deadline under a burst -> shed/expired rates
+
+Every phase replays the same query batch, so `bit_exact_vs_healthy` is a
+hard equality check of ids AND dists against the healthy phase -- the
+degraded phase is the only one allowed to differ. Counters come from the
+service's per-phase `reset_stats()` window. CPU-host numbers are relative,
+as everywhere in benchmarks/: the measured object is the *shape* (recall
+under degradation, hedges vs stalls, shed rate vs bound), not absolute
+throughput.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.core import SearchConfig, brute_force_knn
+from repro.runtime import SearchExecutor, ServePipeline
+from repro.runtime.hostio import HostIOConfig
+from repro.runtime.resilience import (
+    FOREVER,
+    FaultInjector,
+    FaultSpec,
+    ResilienceConfig,
+)
+
+from .common import bench_dataset
+
+FAULT_T = 48
+FAULT_BATCH = 64
+HOT_CACHE_ROWS = 4096
+
+# The JSON schema of one fault-phase row (tests/test_resilience.py pins it).
+FAULT_ROW_SCHEMA = frozenset({
+    "name", "phase", "qps", "recall", "p95_ms", "shed_rate",
+    "expired_queries", "degraded_lanes", "retries", "hedged_gathers",
+    "failover_gathers", "worker_deaths", "deadline_hits", "partitions_down",
+    "bit_exact_vs_healthy", "compile_s",
+})
+
+
+def fault_row(phase: str, stats, *, bit_exact: bool | None,
+              compile_s: float) -> dict:
+    """One fault-phase record conforming to FAULT_ROW_SCHEMA.
+
+    `stats` is the phase's ServeStats (its `.hostio` dict is the service's
+    counter window since the phase started); `bit_exact` is the measured
+    ids+dists equality vs the healthy phase (None when there is no healthy
+    baseline to compare against, e.g. the overload phase's partial batch).
+    """
+    h = stats.hostio or {}
+    n = max(stats.queries + stats.shed_queries, 1)
+    return {
+        "name": f"faults_base_{phase}",
+        "phase": phase,
+        "qps": round(stats.qps, 1),
+        "recall": None if stats.mean_recall is None
+        else round(stats.mean_recall, 4),
+        "p95_ms": round(stats.p95_ms, 2),
+        "shed_rate": round(stats.shed_queries / n, 4),
+        "expired_queries": stats.expired_queries,
+        "degraded_lanes": h.get("degraded_lanes", 0),
+        "retries": h.get("retries", 0),
+        "hedged_gathers": h.get("hedged_gathers", 0),
+        "failover_gathers": h.get("failover_gathers", 0),
+        "worker_deaths": h.get("worker_deaths", 0),
+        "deadline_hits": h.get("deadline_hits", 0),
+        "partitions_down": h.get("partitions_down", 0),
+        "bit_exact_vs_healthy": bit_exact,
+        "compile_s": round(compile_s, 2),
+    }
+
+
+def _row_derived(row: dict) -> str:
+    return (
+        f"qps={row['qps']:.0f},recall={row['recall']},"
+        f"p95_ms={row['p95_ms']},shed={row['shed_rate']:.3f},"
+        f"degraded={row['degraded_lanes']},retries={row['retries']},"
+        f"hedged={row['hedged_gathers']},exact={row['bit_exact_vs_healthy']}"
+    )
+
+
+def run(report) -> None:
+    data, queries, idx = bench_dataset()
+    k = 10
+    q = np.asarray(queries[:FAULT_BATCH], np.float32)
+    gt = np.asarray(brute_force_knn(data, q, k))
+    cfg = SearchConfig(t=FAULT_T, bloom_z=16384)
+    hio = HostIOConfig(
+        workers=2, hot_cache_rows=HOT_CACHE_ROWS, prefetch=True,
+        resilience=ResilienceConfig(
+            deadline_s=0.25, hedge_s=0.05, max_retries=3,
+            # Health transitions are scripted below, never inferred.
+            unhealthy_after=1_000_000, auto_failover=False,
+            degraded_mode="medoid",
+        ),
+    )
+    ex = SearchExecutor.from_index(idx, variant="base", hostio=hio)
+    svc = ex.hostio_service
+    pipe = ServePipeline(ex, k=k, cfg=cfg, max_batch=FAULT_BATCH)
+
+    # Scripted schedule: phase name -> (setup, teardown). The same query
+    # batch replays through every phase so exactness is checkable.
+    def _inject(*specs):
+        svc.set_injector(FaultInjector(specs, seed=7))
+
+    schedule = [
+        ("healthy", lambda: None, lambda: None),
+        # count=2, not FOREVER: the retry budget (max_retries=3) must be
+        # able to absorb every injected failure or lanes would degrade and
+        # break the phase's bit-exactness.
+        ("transient",
+         lambda: _inject(FaultSpec("transient_error", shard=0, count=2)),
+         lambda: svc.set_injector(None)),
+        # Stall (0.15 s) > hedge budget (0.05 s): every stalled pooled
+        # gather / ticket is abandoned and re-gathered inline, bit-exact.
+        ("stalled",
+         lambda: _inject(FaultSpec("worker_stall", stall_s=0.15,
+                                   count=FOREVER)),
+         lambda: svc.set_injector(None)),
+        ("degraded",
+         lambda: svc.mark_partition_down(0), lambda: None),
+        ("failover",
+         lambda: svc.fail_over(0), lambda: None),
+        ("recovered",
+         lambda: svc.recover(0), lambda: None),
+    ]
+    try:
+        pipe.submit(q, gt_ids=gt)
+        _, _, warm = pipe.drain()          # compile outside every phase
+        ids_h = d_h = None
+        for phase, setup, teardown in schedule:
+            setup()
+            svc.reset_stats()
+            pipe.submit(q, gt_ids=gt)
+            ids, dists, stats = pipe.drain()
+            teardown()
+            if phase == "healthy":
+                ids_h, d_h = ids.copy(), dists.copy()
+                exact = True
+            else:
+                exact = bool(
+                    np.array_equal(ids, ids_h) and np.array_equal(dists, d_h)
+                )
+            row = fault_row(phase, stats, bit_exact=exact,
+                            compile_s=warm.compile_s if phase == "healthy"
+                            else stats.compile_s)
+            print(f"ROWJSON,{json.dumps(row)}", flush=True)
+            report(row["name"], stats.wall_s / len(q) * 1e6,
+                   _row_derived(row))
+    finally:
+        pipe.close()
+
+    _overload_phase(report, ex, q, gt, cfg, k)
+
+
+def _overload_phase(report, ex, q, gt, cfg, k) -> None:
+    """Closed admission under burst: bounded queue + tight deadlines."""
+    svc = ex.hostio_service
+    svc.reset_stats()
+    pipe = ServePipeline(
+        ex, k=k, cfg=cfg, max_batch=FAULT_BATCH,
+        max_queue=len(q) // 2, deadline_s=30.0,
+    )
+    try:
+        # A 3x burst against a queue bounded at half one batch: 5/6 of the
+        # offered load must shed, exactly once, at admission.
+        accepted = 0
+        for _ in range(3):
+            accepted += pipe.submit(q, gt_ids=gt)
+        _, _, stats = pipe.drain()
+        assert accepted == stats.queries, (accepted, stats.queries)
+        row = fault_row("overload", stats, bit_exact=None,
+                        compile_s=stats.compile_s)
+        print(f"ROWJSON,{json.dumps(row)}", flush=True)
+        report(row["name"], stats.wall_s / max(stats.queries, 1) * 1e6,
+               _row_derived(row))
+    finally:
+        pipe.close()

@@ -21,6 +21,7 @@ def main() -> None:
     from . import (
         bench_ablations,
         bench_compression,
+        bench_faults,
         bench_hostio,
         bench_iterations,
         bench_kernels,
@@ -36,6 +37,7 @@ def main() -> None:
         ("iterations", bench_iterations),
         ("kernels", bench_kernels),         # incl. the in-executor kernel lane
         ("hostio", bench_hostio),           # host-I/O subsystem sweep
+        ("faults", bench_faults),           # scripted fault-schedule serving
         ("mutation", bench_mutation),       # streaming insert/delete serving
         ("ablations", bench_ablations),
     ]

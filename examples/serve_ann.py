@@ -134,6 +134,38 @@ ids never reused); inserted ids are stable across the fold (delta ids are
 base_n + ordinal); searches racing the background fold stay correct -- the
 tombstone bitmap and the exact delta scan cover the gap until the atomic
 generation swap.
+
+failure-mode / degraded-serving matrix (repro.runtime.resilience; host
+fault handling needs --host-workers >= 1 plus --host-deadline-ms, admission
+control is --max-queue / --deadline-ms on any variant). Handling is
+host-side only: the compiled program never changes with host health, so
+recovery after failover is bit-exact by construction.
+
+    fault                    contract
+    -----------------------  ------------------------------------------
+    transient gather error   retried with exponential backoff (capped
+                             by the host deadline); result bit-exact
+    stalled worker / pool    hedged re-issue: after the hedge budget the
+                             gather re-runs inline on the caller; never
+                             blocks past the deadline, result bit-exact
+    worker crash             the item is requeued before the thread
+                             dies; a pool mate or the hedge completes
+                             it -- zero queries lost
+    partition down +         reads come from the pinned replica via the
+    failover replica         surviving workers; bit-exact
+    partition down, no       degraded serving: hot-cache rows unaffect-
+    replica                  ed; other lanes serve the medoid row
+                             (restart toward the graph centre) or drop
+                             like tombstones ("mask" mode). Recall
+                             degrades and is measured in mean_recall;
+                             degraded_lanes counts the substitutions
+    host queue overflow      enqueue rejected -> inline gather, no loss
+    serve queue overload     submit() sheds past --max-queue, exactly
+                             once, at admission (shed_queries)
+    request deadline hit     dropped at dispatch; result rows stay
+                             (-1, inf) (expired_queries)
+    partition recovery       primary reads resume, bit-exact vs the
+                             fault-free run
 """
 
 
@@ -174,6 +206,18 @@ def main() -> None:
     ap.add_argument("--result-cache", type=int, default=0,
                     help="ServePipeline cross-batch query-result LRU size "
                          "(0 = off)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="admission control: shed submissions past this "
+                         "backlog bound (0 = unbounded; see the failure-"
+                         "mode matrix below)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request serve deadline; expired rows are "
+                         "dropped at dispatch (0 = none)")
+    ap.add_argument("--host-deadline-ms", type=float, default=0.0,
+                    help="host gather deadline: enables retry/backoff, "
+                         "hedged re-issue and degraded-mode serving on "
+                         "the host-I/O path (requires --host-workers "
+                         ">= 1; 0 = legacy blocking behaviour)")
     ap.add_argument("--autotune", action="store_true",
                     help="sweep the fused megakernel's (eager, DMA tile) "
                          "configs on real searches before serving and "
@@ -226,13 +270,23 @@ def main() -> None:
                 "--host-workers applies to the host-graph variants only "
                 "(base, sharded-base)"
             )
+        resilience = None
+        if args.host_deadline_ms > 0:
+            from repro.runtime.resilience import ResilienceConfig
+
+            resilience = ResilienceConfig(
+                deadline_s=args.host_deadline_ms / 1e3
+            )
         hostio = HostIOConfig(
             workers=args.host_workers,
             hot_cache_rows=args.hot_cache_rows,
             prefetch=args.prefetch,
+            resilience=resilience,
         )
     elif args.hot_cache_rows or args.prefetch:
         raise SystemExit("--hot-cache-rows/--prefetch need --host-workers >= 1")
+    elif args.host_deadline_ms:
+        raise SystemExit("--host-deadline-ms needs --host-workers >= 1")
 
     autotune = None
     if args.autotune or os.path.exists(args.autotune_cache):
@@ -311,6 +365,7 @@ def main() -> None:
     pipe = ServePipeline(
         executor, k=args.k, cfg=cfg, max_batch=args.max_batch,
         kernel_mode=args.kernel_mode, result_cache_size=args.result_cache,
+        max_queue=args.max_queue, deadline_s=args.deadline_ms / 1e3,
     )
 
     def on_batch(rep) -> None:
@@ -375,6 +430,21 @@ def main() -> None:
         print(
             f"[serve] result cache: {stats.result_cache_hits} hits "
             f"({stats.result_cache_hit_rate:.1%} of queries)"
+        )
+    if args.max_queue or args.deadline_ms:
+        print(
+            f"[serve] admission control: {stats.shed_queries} shed "
+            f"(queue bound {args.max_queue or 'off'}), "
+            f"{stats.expired_queries} expired "
+            f"(deadline {args.deadline_ms or 'off'} ms)"
+        )
+    if stats.hostio is not None and args.host_deadline_ms:
+        h = stats.hostio
+        print(
+            f"[serve] host resilience: {h['retries']} retries, "
+            f"{h['hedged_gathers']} hedged, {h['degraded_lanes']} degraded "
+            f"lanes, {h['worker_deaths']} worker deaths, "
+            f"{h['partitions_down']} partition(s) down"
         )
     if stats.hostio is not None:
         h = stats.hostio

@@ -90,6 +90,49 @@ hits are impossible -- the next drain drops the cache); consolidation bumps
 `generation`, which keys the compiled-executable cache (old executables are
 dropped, never served) and `refresh()`es retiring hostio hot-adjacency
 caches so pinned rows always mirror the host partitions.
+
+Failure-mode x handling matrix (`repro.runtime.resilience`, enabled via
+`HostIOConfig(resilience=ResilienceConfig(...))` on the host-graph cells
+plus `ServePipeline(max_queue=, deadline_s=)` for admission control).
+Every fault below is reproducible through the seeded `FaultInjector`, the
+handling is host-side only (the traced program never changes with health,
+so recovery is structurally bit-exact), and each row names the counters
+that surface in `ServeStats`:
+
+    fault \\ contract         handling                     counters
+    -----------------------  ---------------------------  ----------------
+    transient gather error   retry w/ exponential         retries,
+                             backoff (deadline-capped);   gather_failures
+                             result bit-exact
+    stalled worker / pool    hedged re-issue: bounded     hedged_gathers,
+    (slow gather)            wait, then inline re-gather  deadline_hits
+                             on the caller; bit-exact,
+                             never blocks past budget
+    worker crash             item requeued before the     worker_deaths
+                             thread dies; pool mate or
+                             hedge completes it -- zero
+                             queries lost
+    host partition down,     reads served from pinned     failovers,
+    failover replica         replica by surviving         failover_gathers
+                             workers; bit-exact
+    host partition down,     degraded serving: hot-cache  degraded_lanes,
+    no replica               hits unaffected, other       partitions_down
+                             lanes get the medoid row
+                             ("medoid": restart toward
+                             centre) or -1 rows ("mask":
+                             dropped like tombstones);
+                             recall degrades, measured
+                             via ServeStats.mean_recall
+    queue overflow (host     enqueue rejected -> caller   enqueue_
+    pool)                    gathers inline; no loss      rejections
+    serve-queue overload     submit() sheds past          shed_queries
+                             max_queue, exactly once,
+                             at admission
+    request deadline passed  dropped at dispatch, result  expired_queries
+                             slots stay (-1, inf)
+    partition recovery       primary reads resume;        recoveries
+                             results bit-exact vs the
+                             fault-free run
 """
 from __future__ import annotations
 

@@ -153,6 +153,16 @@ def tombstone_mask_fn(tombstones: Array) -> TombstoneFn:
     never expanded, recorded in the re-rank history, or returned. Sentinel /
     negative / out-of-range ids are never reported deleted (padding already
     masks them).
+
+    Degraded-mode serving rides the *same* validity seam from the other
+    side (`repro.runtime.resilience`): when a host partition is down and a
+    neighbour row cannot be fetched, the host service substitutes either a
+    zero contribution -- which the exchange's `-1` shift turns into an
+    all -1 row, dropped by the `(nbrs >= 0)` check below exactly like
+    tombstone padding -- or the medoid's adjacency row (a medoid restart
+    for that lane). Either way the substitution happens host-side inside
+    the callback, so the traced program here never changes with host
+    health and post-recovery results are structurally bit-exact.
     """
     n = tombstones.shape[0]
 
@@ -534,6 +544,10 @@ def bang_search(
             nbrs = neighbor_fn(s.u)                               # (B, R)
         else:
             nbrs = neighbor_fn(s.u, s.tok)                        # (B, R)
+        # The (nbrs >= 0) validity check is also the degraded-serving seam:
+        # unfetchable lanes (host partition down, "mask" mode) arrive as
+        # all -1 rows from the exchange and are dropped here exactly like
+        # adjacency padding -- no extra operand, no retrace.
         valid = (nbrs >= 0) & s.active[:, None]
         if tombstone_fn is not None:
             # Streaming mutability (§4.6 selection / worklist-merge masks):

@@ -1,12 +1,19 @@
 # Runtime subsystem: resident serving executors + the LM training loop.
-#   executor -- jit-cached, shape-bucketed three-stage search pipeline (1 device)
-#   sharded  -- the same contract over a device mesh (graph > one device)
-#   serving  -- streaming micro-batch serve loop with double buffering
-#   hostio   -- async host-I/O subsystem (multi-worker neighbour service,
-#               device-resident hot-adjacency cache, prefetched exchange)
-#   mutation -- streaming mutability: live insert/delete + consolidation
+#   executor    -- jit-cached, shape-bucketed three-stage search pipeline (1 device)
+#   sharded     -- the same contract over a device mesh (graph > one device)
+#   serving     -- streaming micro-batch serve loop with double buffering
+#   hostio      -- async host-I/O subsystem (multi-worker neighbour service,
+#                  device-resident hot-adjacency cache, prefetched exchange)
+#   mutation    -- streaming mutability: live insert/delete + consolidation
+#   resilience  -- fault injection + fault handling for the host-I/O tier
+#                  (deadlines/retries/hedging, failover, degraded serving)
 from .executor import SearchExecutor, SearchHandle, bucket_size, pad_batch  # noqa: F401
 from .hostio import HostIOConfig, HostIORuntime, NeighborService  # noqa: F401
+from .resilience import (  # noqa: F401
+    FaultInjector,
+    FaultSpec,
+    ResilienceConfig,
+)
 from .mutation import DeltaGraph, MutableBangIndex, MutableSearchExecutor  # noqa: F401
 from .serving import BatchReport, ServePipeline, ServeStats  # noqa: F401
 from .sharded import SHARDED_VARIANTS, ShardedSearchExecutor  # noqa: F401

@@ -229,6 +229,18 @@ class SearchExecutor:
         rt = self.hostio_runtime
         return None if rt is None else rt.service
 
+    @property
+    def query_dim(self) -> int | None:
+        """Expected query width d, or None if no vector store is attached.
+
+        ServePipeline.submit() validates incoming queries against this up
+        front, so a malformed batch fails with a clear error instead of
+        deep inside dispatch padding. Row sharding never changes the width,
+        so the sharded subclass inherits this off its device store.
+        """
+        src = self._data_np if self._data_dev is None else self._data_dev
+        return None if src is None else int(src.shape[1])
+
     def autotune_shape(self) -> tuple[int, int, int]:
         """(R, m, codes_block_rows): the shape axes autotune winners key on.
 

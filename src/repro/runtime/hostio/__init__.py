@@ -33,6 +33,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.runtime.resilience import ResilienceConfig  # noqa: F401
+
 from .cache import HotAdjacencyCache  # noqa: F401
 from .prefetch import make_base_exchange, make_shard_exchange  # noqa: F401
 from .service import NeighborService  # noqa: F401
@@ -42,6 +44,7 @@ __all__ = [
     "HostIORuntime",
     "HotAdjacencyCache",
     "NeighborService",
+    "ResilienceConfig",
     "make_base_exchange",
     "make_shard_exchange",
 ]
@@ -55,11 +58,18 @@ class HostIOConfig:
     hot_cache_rows  top-in-degree adjacency rows pinned on device (0 = off)
     prefetch        double-buffer the frontier exchange (issue hop k+1's
                     gather while the device merges hop k)
+    resilience      fault-handling policy (deadlines, retry/backoff,
+                    hedging, failover, degraded mode); None = legacy
+                    fail-fast behaviour. Frozen, so it rides the compile
+                    key harmlessly: every resilience decision is host-side
+                    state inside the callbacks, the traced program is
+                    identical for any value.
     """
 
     workers: int = 1
     hot_cache_rows: int = 0
     prefetch: bool = False
+    resilience: ResilienceConfig | None = None
 
     def __post_init__(self) -> None:
         if self.workers < 1:
@@ -67,6 +77,13 @@ class HostIOConfig:
         if self.hot_cache_rows < 0:
             raise ValueError(
                 f"hot_cache_rows must be >= 0, got {self.hot_cache_rows}"
+            )
+        if self.resilience is not None and not isinstance(
+            self.resilience, ResilienceConfig
+        ):
+            raise TypeError(
+                "resilience must be a ResilienceConfig or None, "
+                f"got {type(self.resilience).__name__}"
             )
 
 
@@ -89,7 +106,8 @@ class HostIORuntime:
     ) -> None:
         self.config = config
         self.service = NeighborService(
-            partitions, workers=config.workers, name=name
+            partitions, workers=config.workers, name=name,
+            resilience=config.resilience, medoid=medoid,
         )
         self.cache = (
             HotAdjacencyCache(adjacency, config.hot_cache_rows, medoid=medoid)

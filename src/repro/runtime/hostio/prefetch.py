@@ -33,6 +33,21 @@ prefetch_fn) pair for the two host-graph placements ("base" /
 cache is given: hit lanes are served from device memory and masked out of
 the ownership mask both at issue and at collect time, so the host never
 gathers (or prefetches) a cached row.
+
+Degraded-serving contract (`repro.runtime.resilience`): nothing in this
+module changes when the host tier is unhealthy, by design. Deadlines,
+retries, hedging, failover reads and degraded-row substitution all happen
+*inside* `service.request/issue/collect` -- host-side, behind the same
+callback signatures -- so the traced exchange here is byte-identical in
+every health state (no retrace, ever). A ticket whose pooled gather stalls
+is abandoned by `collect` after its hedge/deadline budget and re-gathered
+inline (bit-exact); a lane whose partition is down and un-failed-over
+arrives as either the medoid's +1-shifted row ("medoid" mode) or a zero
+contribution ("mask" mode), which the `- 1` shift below turns into an
+all -1 row -- exactly the shape of tombstone padding, dropped by the same
+`(nbrs >= 0)` validity mask in `core.search.bang_search`. Cache-hit lanes
+are immune to host faults entirely: the `jnp.where(hit, dev_rows, rows)`
+merge serves them from device memory no matter what the host returned.
 """
 from __future__ import annotations
 

@@ -27,13 +27,30 @@ queue, no concurrency and no way to measure contention.
     through the callback), prefetch hit/miss/mismatch counts, and the
     measured `overlap_fraction` -- the share of host gather time hidden
     behind device compute (`stats()`).
+  * **Fault handling** (`repro.runtime.resilience`). A `ResilienceConfig`
+    turns on deadline-aware gathers with retry + exponential backoff on
+    transient errors, hedged inline re-issue when a pooled gather or a
+    prefetch ticket stalls past its wait budget, a per-partition health
+    tracker (consecutive primary-read failures mark a partition down, with
+    optional automatic replica pinning for bit-exact failover reads), and
+    degraded-mode row substitution -- unfetchable lanes serve either the
+    medoid's adjacency row ("medoid": the search restarts toward the graph
+    centre) or nothing at all ("mask": the lanes surface as -1 rows and
+    ride the same validity mask as tombstone padding in
+    `core.search.bang_search`). A seeded `FaultInjector` can be attached
+    (`set_injector`) to script worker crashes/stalls, partition outages,
+    queue overflow and transient gather errors deterministically; the
+    handling machinery cannot tell injected faults from real ones.
 
 The gather math is exactly `core.distributed.host_shard_service`'s: owned
 lanes contribute `partition[rel] + 1`, everything else 0, so a psum across
 shards (or a plain `-1` for the single-partition base variant) reconstructs
 the row exchange bit-for-bit. The service never touches host memory for
 non-owned or cache-hit lanes -- tests/test_hostio.py pins the
-exactly-once-per-miss property.
+exactly-once-per-miss property. Crucially the *traced device program* is
+identical whether the host tier is healthy, degraded or failed over: every
+fault decision happens host-side inside the callback bodies, so degraded
+serving never retraces and recovery is structurally bit-exact.
 """
 from __future__ import annotations
 
@@ -42,6 +59,13 @@ import threading
 import time
 
 import numpy as np
+
+from repro.runtime.resilience import (
+    InjectedWorkerCrash,
+    PartitionDownError,
+    TransientGatherError,
+    backoff_delay,
+)
 
 __all__ = ["NeighborService"]
 
@@ -55,6 +79,11 @@ _MIN_CHUNK = 8
 # program execution. Evicting is always safe: collect() of an evicted seq
 # falls back to an inline gather (counted as a prefetch miss), bit-exact.
 _MAX_PENDING = 64
+
+# Last-resort wait on a pooled gather / prefetch ticket when no
+# ResilienceConfig is attached: long enough to never fire in healthy
+# operation, finite so a wedged pool can never hang the compiled program.
+_STUCK_POOL_S = 60.0
 
 
 class _Pending:
@@ -81,9 +110,15 @@ class NeighborService:
     ServePipeline double-buffers dispatches): every prefetch ticket is a
     unique sequence number, so interleaved issue/collect streams never
     cross-match.
+
+    `resilience` (a `ResilienceConfig`) enables the fault-handling contract
+    described in the module docstring; `medoid` (a global row id) pins the
+    medoid's adjacency row host-side for degraded-mode substitution;
+    `injector` (or `set_injector`) attaches a scripted `FaultInjector`.
     """
 
-    def __init__(self, partitions, *, workers: int = 1, name: str = "hostio"):
+    def __init__(self, partitions, *, workers: int = 1, name: str = "hostio",
+                 resilience=None, medoid: int | None = None, injector=None):
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
         self._parts = [
@@ -97,6 +132,20 @@ class NeighborService:
         self.n_loc, self.R = n_loc, R
         self.workers = workers
         self.name = name
+        self.resilience = resilience
+        self._injector = injector
+        # Medoid adjacency row, pinned at construction: degraded-mode
+        # substitution must not read the (possibly down) owning partition.
+        self._medoid_row: np.ndarray | None = None
+        if medoid is not None and 0 <= medoid < n_loc * len(self._parts):
+            self._medoid_row = self._parts[medoid // n_loc][
+                medoid % n_loc
+            ].copy()
+        # Partition health (all guarded by self._lock): partitions marked
+        # down, pinned failover replicas, and consecutive-failure streaks.
+        self._down: set[int] = set()
+        self._failover: dict[int, np.ndarray] = {}
+        self._fail_streak: dict[int, int] = {}
         self._queues: list[queue.Queue] | None = None
         self._threads: list[threading.Thread] = []
         self._lock = threading.Lock()
@@ -123,7 +172,7 @@ class NeighborService:
                 for s, q in enumerate(self._queues):
                     for w in range(self.workers):
                         th = threading.Thread(
-                            target=self._worker_loop, args=(q,),
+                            target=self._worker_loop, args=(q, s),
                             name=f"{self.name}-p{s}-w{w}", daemon=True,
                         )
                         th.start()
@@ -139,16 +188,42 @@ class NeighborService:
         False and must do the work inline. This is what makes one service
         safe to share between pipelines (BangIndex caches executors per
         config, so two ServePipelines can own the same service).
+
+        The fault injector models queue overflow here: a rejected put
+        returns False and the caller degrades to the same inline path, so
+        overflow sheds *queueing*, never work. Items destined for a
+        partition that is marked down are routed to the least-loaded
+        surviving pool -- its workers can serve the pinned replica just as
+        well, which is how failover re-pins a dead partition's rows onto
+        the remaining workers.
         """
+        inj = self._injector
+        if inj is not None and not inj.on_enqueue(shard):
+            self._bump(enqueue_rejections=1)
+            return False
         with self._lock:
             if self._queues is None:
                 return False
-            self._bump_locked(max_queue_depth=self._queues[shard].qsize() + 1)
-            self._queues[shard].put(item)
+            target = shard
+            if shard in self._down:
+                alive = [
+                    s for s in range(len(self._parts)) if s not in self._down
+                ]
+                if alive:
+                    target = min(alive, key=lambda s: self._queues[s].qsize())
+            self._bump_locked(max_queue_depth=self._queues[target].qsize() + 1)
+            self._queues[target].put(item)
             return True
 
     def stop(self) -> None:
-        """Drain and join the pools (idempotent; start() revives them)."""
+        """Drain and join the pools (idempotent; start() revives them).
+
+        In-flight prefetch tickets are poisoned under the same lock that
+        guards issue(): any pending gather that has not completed gets its
+        done-event set with `out` still None, so a collect() racing the
+        shutdown takes the inline-gather miss path immediately (bit-exact)
+        instead of blocking on a queue no worker will ever drain again.
+        """
         with self._lock:
             queues, threads = self._queues, self._threads
             self._queues, self._threads = None, []
@@ -158,17 +233,34 @@ class NeighborService:
                 for q in queues:
                     for _ in range(self.workers):
                         q.put(None)
+            now = time.perf_counter()
+            for p in self._pending.values():
+                if not p.done.is_set():
+                    p.t_done = now
+                    p.done.set()
         for th in threads:
             th.join(timeout=5.0)
 
-    def _worker_loop(self, q: queue.Queue) -> None:
+    def _worker_loop(self, q: queue.Queue, shard: int) -> None:
         while True:
             item = q.get()
             if item is None:
                 return
             fn = item
+            died = False
             try:
+                inj = self._injector
+                if inj is not None:
+                    inj.on_worker(shard)
                 fn()
+            except InjectedWorkerCrash:
+                # The crash fires before fn() ran: requeue the untouched
+                # item so a surviving pool mate completes it (or, for a
+                # now-empty pool, the caller's hedge/ticket timeout gathers
+                # inline) -- a dead worker loses zero requests.
+                q.put(fn)
+                self._bump(worker_deaths=1)
+                died = True
             except Exception as e:
                 # Work items release their own latches in finally blocks, so
                 # nothing deadlocks; keep the worker alive for later requests
@@ -184,6 +276,146 @@ class NeighborService:
                 print(f"[{self.name}] worker error: {e!r}", file=sys.stderr)
             finally:
                 q.task_done()
+            if died:
+                return
+
+    # ----------------------------------------------------- health & faults
+    def set_injector(self, injector) -> None:
+        """Attach (or detach, with None) a scripted FaultInjector."""
+        self._injector = injector
+
+    def mark_partition_down(self, shard: int) -> None:
+        """Mark a host partition unreachable (reads degrade or fail over)."""
+        with self._lock:
+            self._down.add(int(shard))
+
+    def fail_over(self, shard: int) -> None:
+        """Mark a partition down AND pin a replica of its rows.
+
+        Reads of a failed-over partition come from the replica -- bit-exact
+        vs the primary -- and are served by the surviving pools. In this
+        in-process model the replica is copied from the still-resident
+        primary array; it stands in for the pre-provisioned replica a real
+        disaggregated tier would promote.
+        """
+        shard = int(shard)
+        with self._lock:
+            self._down.add(shard)
+            if shard not in self._failover:
+                self._failover[shard] = self._parts[shard].copy()
+                self._bump_locked(failovers=1)
+
+    def recover(self, shard: int) -> None:
+        """Bring a partition back: primary reads resume (bit-exact)."""
+        shard = int(shard)
+        with self._lock:
+            was = shard in self._down or shard in self._failover
+            self._down.discard(shard)
+            self._failover.pop(shard, None)
+            self._fail_streak.pop(shard, None)
+            if was:
+                self._bump_locked(recoveries=1)
+
+    def partition_state(self, shard: int) -> str:
+        """'up', 'down' (degraded lanes) or 'failover' (replica reads)."""
+        with self._lock:
+            if shard in self._down:
+                return "failover" if shard in self._failover else "down"
+            return "up"
+
+    def _read_rows(self, shard: int, idx: np.ndarray) -> np.ndarray:
+        """The single host-memory touch point for adjacency rows.
+
+        Down + replica -> replica read (counted as a failover gather).
+        Down + no replica -> PartitionDownError (degrade/retry upstream).
+        Up -> injector gate, then the primary partition.
+        """
+        with self._lock:
+            down = shard in self._down
+            replica = self._failover.get(shard)
+        if down:
+            if replica is not None:
+                self._bump(failover_gathers=1)
+                return replica[idx]
+            raise PartitionDownError(
+                f"partition {shard} is down and has no failover replica"
+            )
+        inj = self._injector
+        if inj is not None:
+            inj.on_gather(shard)
+        return self._parts[shard][idx]
+
+    def _note_gather_failure(self, shard: int) -> None:
+        """Record one failed primary read; mark down on a long streak."""
+        res = self.resilience
+        with self._lock:
+            self._bump_locked(gather_failures=1)
+            streak = self._fail_streak.get(shard, 0) + 1
+            self._fail_streak[shard] = streak
+            if (res is not None and streak >= res.unhealthy_after
+                    and shard not in self._down):
+                self._down.add(shard)
+                if res.auto_failover and shard not in self._failover:
+                    self._failover[shard] = self._parts[shard].copy()
+                    self._bump_locked(failovers=1)
+
+    def _degrade_lanes(self, out: np.ndarray, lanes: np.ndarray) -> None:
+        """Serve unfetchable lanes without host reads.
+
+        "medoid": substitute the pinned medoid adjacency row -- the search
+        restarts toward the graph centre, keeping the worklist populated.
+        "mask": contribute 0, so after the -1 shift the lanes surface as
+        all -1 rows and are dropped by the same `(nbrs >= 0)` validity mask
+        that drops tombstone padding (see core.search.bang_search).
+        """
+        res = self.resilience
+        mode = "medoid" if res is None else res.degraded_mode
+        if mode == "medoid" and self._medoid_row is not None:
+            out[lanes] = self._medoid_row[None, :] + 1
+        else:
+            out[lanes] = 0
+        self._bump(degraded_lanes=int(lanes.size))
+
+    def _gather_chunk(self, shard: int, rel: np.ndarray, out: np.ndarray,
+                      lanes: np.ndarray, deadline: float) -> None:
+        """Fill one chunk of owned lanes; retries, then degrades. Never raises.
+
+        Transient errors and down-partitions retry up to
+        `resilience.max_retries` times with exponential backoff capped at
+        the remaining deadline (a failure streak can flip the partition to
+        failover mid-loop, in which case a retry succeeds bit-exactly from
+        the replica). Exhausted attempts degrade the lanes instead of
+        failing the request.
+        """
+        res = self.resilience
+        attempts = 1 + (res.max_retries if res is not None else 0)
+        for attempt in range(attempts):
+            try:
+                out[lanes] = self._read_rows(shard, rel[lanes]) + 1
+            except (PartitionDownError, TransientGatherError):
+                self._note_gather_failure(shard)
+                if attempt + 1 >= attempts:
+                    break
+                if deadline > 0:
+                    remaining = deadline - time.perf_counter()
+                    if remaining <= 0:
+                        self._bump(deadline_hits=1)
+                        break
+                else:
+                    remaining = -1.0
+                if res is not None:
+                    time.sleep(backoff_delay(res, attempt, remaining))
+                continue
+            # Success: reset the failure streak and count the host traffic.
+            if self._fail_streak.get(shard):
+                with self._lock:
+                    self._fail_streak[shard] = 0
+            bumps = {"rows_gathered": int(lanes.size)}
+            if attempt > 0:
+                bumps["retries"] = attempt
+            self._bump(**bumps)
+            return
+        self._degrade_lanes(out, lanes)
 
     # -------------------------------------------------------------- counters
     def reset_stats(self) -> None:
@@ -198,6 +430,16 @@ class NeighborService:
                 "prefetch_misses": 0,
                 "prefetch_lane_mismatches": 0,
                 "worker_errors": 0,
+                "worker_deaths": 0,
+                "retries": 0,
+                "gather_failures": 0,
+                "degraded_lanes": 0,
+                "hedged_gathers": 0,
+                "deadline_hits": 0,
+                "failover_gathers": 0,
+                "failovers": 0,
+                "recoveries": 0,
+                "enqueue_rejections": 0,
                 "max_queue_depth": 0,
                 "gather_s_total": 0.0,
                 "gather_s_hidden": 0.0,
@@ -258,6 +500,7 @@ class NeighborService:
         with self._lock:
             c = dict(self._c)
             last_error = self._last_worker_error
+            partitions_down = len(self._down)
         n = max(c["requests"], 1)
         return {
             **{k: v for k, v in c.items()
@@ -268,9 +511,24 @@ class NeighborService:
             "last_worker_error": last_error,
             "workers": self.workers,
             "partitions": len(self._parts),
+            "partitions_down": partitions_down,
         }
 
     # --------------------------------------------------------------- gathers
+    def _wait_budget_s(self) -> float:
+        """How long to wait on a pooled gather / ticket before hedging."""
+        res = self.resilience
+        return _STUCK_POOL_S if res is None else min(
+            res.wait_s(), _STUCK_POOL_S
+        )
+
+    def _deadline(self) -> float:
+        """Absolute per-gather deadline (0.0 = none configured)."""
+        res = self.resilience
+        if res is None or res.deadline_s <= 0:
+            return 0.0
+        return time.perf_counter() + res.deadline_s
+
     def _gather(
         self, shard: int, rel: np.ndarray, own: np.ndarray, pooled: bool = True
     ) -> np.ndarray:
@@ -284,6 +542,13 @@ class NeighborService:
         block that slot waiting on chunk tasks queued behind it (two
         concurrent prefetches could otherwise occupy every worker and
         deadlock).
+
+        The pooled wait is bounded by the hedge budget: if the pool stalls
+        (slow worker, crashed worker with no pool mate, rejected enqueue
+        racing a stop), the shared buffer is abandoned and the whole gather
+        re-runs serially on the calling thread into a fresh buffer -- a
+        stalled worker finishing late can therefore never corrupt a result
+        already returned.
         """
         rel = np.asarray(rel)
         own = np.asarray(own, bool)
@@ -291,34 +556,37 @@ class NeighborService:
         lanes = np.nonzero(own)[0]
         if lanes.size == 0:
             return out
-        # Every host read is counted here, at the gather site, so re-gathers
-        # (mismatched prefetch lanes) and never-collected prefetches show up
-        # in `rows_gathered` -- it measures actual host memory traffic, while
-        # `host_miss_lanes` stays the logical once-per-request count.
-        self._bump(rows_gathered=int(lanes.size))
-        part = self._parts[shard]
-        n_chunks = min(self.workers, max(1, lanes.size // _MIN_CHUNK))
-        if n_chunks == 1 or not pooled:
+        deadline = self._deadline()
+        part_n = min(self.workers, max(1, lanes.size // _MIN_CHUNK))
+        if part_n == 1 or not pooled:
             # Serial fast path (tiny request, or in-slot prefetch gather).
-            out[lanes] = part[rel[lanes]] + 1
+            self._gather_chunk(shard, rel, out, lanes, deadline)
             return out
         remaining = threading.Semaphore(0)
 
         def task(chunk: np.ndarray):
             def run() -> None:
                 try:
-                    out[chunk] = part[rel[chunk]] + 1
+                    self._gather_chunk(shard, rel, out, chunk, deadline)
                 finally:
                     remaining.release()
             return run
 
-        chunks = np.array_split(lanes, n_chunks)
+        chunks = np.array_split(lanes, part_n)
         for chunk in chunks:
             item = task(chunk)
             if not self._enqueue(shard, item):
-                item()          # pools stopped mid-flight: degrade inline
-        for _ in chunks:        # every path (worker or inline) releases once
-            remaining.acquire()
+                item()          # pools stopped / queue rejected: inline
+        hedge_at = time.perf_counter() + self._wait_budget_s()
+        for _ in chunks:
+            budget = hedge_at - time.perf_counter()
+            if budget <= 0 or not remaining.acquire(timeout=budget):
+                # Hedged re-issue: redo the full gather serially into a
+                # fresh buffer (late workers may still write `out`).
+                self._bump(hedged_gathers=1)
+                fresh = np.zeros_like(out)
+                self._gather_chunk(shard, rel, fresh, lanes, deadline)
+                return fresh
         return out
 
     # ----------------------------------------------------- callback protocol
@@ -381,7 +649,10 @@ class NeighborService:
         (rel, own) disagree with the ones requested now are re-gathered
         inline (counted as `prefetch_lane_mismatches`), and an unknown or
         never-issued ticket falls back to a full synchronous gather
-        (`prefetch_misses`).
+        (`prefetch_misses`). A ticket whose pooled gather stalls past the
+        hedge/deadline budget is abandoned the same way (counted as a
+        hedged gather as well) -- collect never blocks past its wait
+        budget, which is what bounds the request deadline end to end.
         """
         t0 = time.perf_counter()
         shard = int(np.asarray(shard))
@@ -390,11 +661,10 @@ class NeighborService:
         seq = int(np.asarray(seq).ravel()[0])
         with self._lock:
             p = self._pending.pop(seq, None)
-        if p is not None:
-            # Bounded wait: if the pools were stopped with the gather still
-            # queued the event may never fire -- fall back to inline rather
-            # than hang the compiled program.
-            p.done.wait(timeout=60.0)
+        if p is not None and not p.done.wait(timeout=self._wait_budget_s()):
+            # Stalled ticket: hedge inline rather than block the program.
+            self._bump(hedged_gathers=1)
+            p = None
         if p is None or p.out is None:
             out = self._gather(shard, rel, own)
             self._bump(prefetch_misses=1)

@@ -225,6 +225,10 @@ class MutableSearchExecutor:
         return self._inner().hostio_runtime
 
     @property
+    def query_dim(self) -> int | None:
+        return self._inner().query_dim
+
+    @property
     def trace_counts(self) -> dict:
         return self._inner().trace_counts
 

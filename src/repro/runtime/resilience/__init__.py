@@ -1,0 +1,45 @@
+"""Fault injection and fault handling for the host-assisted serve tier.
+
+BANG's GPU search loop leans on a contended host memory tier for graph
+adjacency (the paper's CPU half). This package makes that dependency
+survivable and *testable*:
+
+    faults.py   deterministic, seedable `FaultInjector` + the exception
+                vocabulary (`TransientGatherError`, `PartitionDownError`,
+                `InjectedWorkerCrash`) shared with the real health
+                tracker in `hostio/service.py`;
+    policy.py   `ResilienceConfig` — deadlines, retry/backoff, hedged
+                re-issue, partition health thresholds, failover and
+                degraded-mode selection.
+
+See `repro.core.bang` for the failure-mode x handling contract matrix,
+and `tests/test_resilience.py` for the scripted fault schedules that
+pin the behaviour.
+"""
+from repro.runtime.resilience.faults import (
+    FAULT_KINDS,
+    FOREVER,
+    FaultInjector,
+    FaultSpec,
+    InjectedWorkerCrash,
+    PartitionDownError,
+    TransientGatherError,
+)
+from repro.runtime.resilience.policy import (
+    DEGRADED_MODES,
+    ResilienceConfig,
+    backoff_delay,
+)
+
+__all__ = [
+    "DEGRADED_MODES",
+    "FAULT_KINDS",
+    "FOREVER",
+    "FaultInjector",
+    "FaultSpec",
+    "InjectedWorkerCrash",
+    "PartitionDownError",
+    "ResilienceConfig",
+    "TransientGatherError",
+    "backoff_delay",
+]

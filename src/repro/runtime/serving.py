@@ -30,6 +30,17 @@ work of the next query batch with the device-side search of the current one.
     context manager) stops them, and each drain's `ServeStats.hostio`
     carries the service's counter snapshot (queue depth, latency, cache hit
     rate, prefetch `overlap_fraction`).
+  * **Admission control.** With `max_queue > 0`, `submit()` sheds whatever
+    would push the backlog past the bound -- shed rows are rejected *at
+    submission*, exactly once, and never consume executor work (the
+    at-most-once property tests/test_resilience.py pins). With
+    `deadline_s > 0` (or a per-submit override), each accepted row carries
+    an absolute deadline and is dropped at dispatch time if it has already
+    expired -- its result slots stay (-1, inf), it is excluded from
+    latency/recall, and it can never hold a micro-batch hostage. Both
+    counters surface as `ServeStats.shed_queries` / `expired_queries`;
+    host-side fault handling (retries, hedges, degraded lanes, failover)
+    reports through `ServeStats.hostio` (see `repro.runtime.resilience`).
 
 The pipeline is executor-agnostic: any object with the `SearchExecutor`
 dispatch/finish contract works, including `ShardedSearchExecutor` — then
@@ -87,6 +98,8 @@ class ServeStats:
     mean_recall: float | None  # row-weighted mean recall@k over gt rows
     result_cache_hits: int = 0      # rows served from the query-result LRU
     result_cache_hit_rate: float = 0.0  # hits / queries in this window
+    shed_queries: int = 0       # rows rejected by admission control (submit)
+    expired_queries: int = 0    # accepted rows dropped at dispatch: deadline
     hostio: dict | None = None  # NeighborService counter snapshot, if any
     mutation: dict | None = None  # MutableSearchExecutor counters, if any
 
@@ -109,11 +122,17 @@ class ServePipeline:
         max_batch: int = 128,
         kernel_mode: str | None = None,
         result_cache_size: int = 0,
+        max_queue: int = 0,
+        deadline_s: float = 0.0,
     ) -> None:
         if max_batch <= 0:
             raise ValueError("max_batch must be positive")
         if result_cache_size < 0:
             raise ValueError("result_cache_size must be >= 0")
+        if max_queue < 0:
+            raise ValueError(f"max_queue must be >= 0, got {max_queue}")
+        if deadline_s < 0:
+            raise ValueError(f"deadline_s must be >= 0, got {deadline_s}")
         self._ex = executor
         self._k = k
         self._cfg = cfg or SearchConfig(t=max(t, k))
@@ -123,7 +142,12 @@ class ServePipeline:
             self._cfg = dataclasses.replace(self._cfg, kernel_mode=kernel_mode)
         self._rerank = rerank
         self._max_batch = max_batch
-        # queue rows: (query row (d,), enqueue timestamp, gt row or None)
+        # Admission control: bounded backlog + per-request deadlines.
+        self._max_queue = max_queue
+        self._deadline_s = deadline_s
+        self._shed_pending = 0      # sheds since the last drain() report
+        # queue rows: (query row (d,), enqueue timestamp, gt row or None,
+        #              absolute deadline (perf_counter seconds; 0 = none))
         self._queue: deque = deque()
         # Cross-batch query-result LRU: exact query bytes -> (ids, dists)
         # rows, exactly as the executor returned them (bit-identical hits).
@@ -168,18 +192,84 @@ class ServePipeline:
     def pending(self) -> int:
         return len(self._queue)
 
-    def submit(self, queries: np.ndarray, gt_ids: np.ndarray | None = None) -> int:
-        """Enqueue queries ((B, d) or (d,)); optional (B, k') ground truth."""
-        q = np.asarray(queries, np.float32)
+    def submit(
+        self,
+        queries: np.ndarray,
+        gt_ids: np.ndarray | None = None,
+        *,
+        deadline_s: float | None = None,
+    ) -> int:
+        """Enqueue queries ((B, d) or (d,)); optional (B, k') ground truth.
+
+        Validates shape/dtype/content up front with a clear error instead of
+        failing deep inside dispatch (or silently corrupting the result-LRU
+        key, which is the raw query bytes): queries must be a real-numeric
+        1-D or 2-D array whose values are finite, with the executor's query
+        width when it exposes one; `gt_ids` must be an integer array with
+        one row per query. Rows are normalised to contiguous float32 so the
+        cache key is canonical for every input dtype/stride.
+
+        Returns the number of rows *accepted*. With `max_queue > 0`, rows
+        that would push the backlog past the bound are shed here -- counted
+        once in the next drain's `ServeStats.shed_queries`, never enqueued,
+        never served. `deadline_s` overrides the pipeline default for this
+        call's rows (0 disables); expired rows are dropped at dispatch.
+        """
+        q = np.asarray(queries)
         if q.ndim == 1:
             q = q[None]
-        gt = None if gt_ids is None else np.asarray(gt_ids)
-        if gt is not None and gt.shape[0] != q.shape[0]:
-            raise ValueError("gt_ids must have one row per query")
+        if q.ndim != 2:
+            raise ValueError(
+                f"queries must be (d,) or (B, d), got shape {q.shape}"
+            )
+        if q.dtype == object or not (
+            np.issubdtype(q.dtype, np.floating)
+            or np.issubdtype(q.dtype, np.integer)
+            or np.issubdtype(q.dtype, np.bool_)
+        ):
+            raise TypeError(
+                f"queries must be real-numeric, got dtype {q.dtype}"
+            )
+        q = np.ascontiguousarray(q, np.float32)
+        if not np.isfinite(q).all():
+            raise ValueError("queries contain NaN/Inf")
+        d = getattr(self._ex, "query_dim", None)
+        if d is not None and q.shape[1] != d:
+            raise ValueError(
+                f"queries have dim {q.shape[1]}, executor expects {d}"
+            )
+        gt = None
+        if gt_ids is not None:
+            gt = np.asarray(gt_ids)
+            if gt.ndim == 1 and q.shape[0] == 1:
+                gt = gt[None]
+            if gt.ndim != 2 or gt.shape[0] != q.shape[0]:
+                raise ValueError(
+                    f"gt_ids must have one row per query: got shape "
+                    f"{np.asarray(gt_ids).shape} for {q.shape[0]} queries"
+                )
+            if not np.issubdtype(gt.dtype, np.integer):
+                raise TypeError(
+                    f"gt_ids must be integer ids, got dtype {gt.dtype}"
+                )
         now = time.perf_counter()
-        for i, row in enumerate(q):
-            self._queue.append((row, now, None if gt is None else gt[i]))
-        return q.shape[0]
+        ttl = self._deadline_s if deadline_s is None else deadline_s
+        if ttl < 0:
+            raise ValueError(f"deadline_s must be >= 0, got {ttl}")
+        deadline = now + ttl if ttl > 0 else 0.0
+        accept = q.shape[0]
+        if self._max_queue > 0:
+            room = max(self._max_queue - len(self._queue), 0)
+            if accept > room:
+                # Shed the tail *at submission* -- the rejected rows are
+                # never enqueued, so they can be counted exactly once.
+                self._shed_pending += accept - room
+                accept = room
+        for i in range(accept):
+            self._queue.append(
+                (q[i], now, None if gt is None else gt[i], deadline)
+            )
+        return accept
 
     # ------------------------------------------------------- result cache
     def _cache_lookup(self, row: np.ndarray):
@@ -228,18 +318,24 @@ class ServePipeline:
         batches = 0
         compile_s = 0.0
         cache_hits = 0
+        expired = 0
         t_start = time.perf_counter()
 
         # Result-cache pre-pass: rows seen in an earlier drain are answered
         # straight from the LRU and never reach the executor; the remaining
-        # misses keep their original submission positions.
+        # misses keep their original submission positions. Rows whose
+        # deadline already passed are dropped here (their result slots stay
+        # -1/inf) -- a timed-out client gets nothing, not late work.
         misses: deque = deque()
         hit_gt_ids: list[np.ndarray] = []
         hit_gt_true: list[np.ndarray] = []
-        for at, (row, t_enq, gt) in enumerate(self._queue):
+        for at, (row, t_enq, gt, dl) in enumerate(self._queue):
+            if dl and time.perf_counter() > dl:
+                expired += 1
+                continue
             cached = self._cache_lookup(row)
             if cached is None:
-                misses.append((at, (row, t_enq, gt)))
+                misses.append((at, (row, t_enq, gt, dl)))
                 continue
             ids_out[at], dists_out[at] = cached
             cache_hits += 1
@@ -260,14 +356,19 @@ class ServePipeline:
         try:
             while misses or inflight is not None:
                 nxt = None
-                if misses:
-                    # Host-side work for the next batch (pop, stack, pad,
-                    # upload, async dispatch) happens while the previous
-                    # batch computes.
-                    popped = [
-                        misses.popleft()
-                        for _ in range(min(self._max_batch, len(misses)))
-                    ]
+                # Host-side work for the next batch (pop, stack, pad,
+                # upload, async dispatch) happens while the previous
+                # batch computes. Deadlines are enforced here, at
+                # dispatch: a row that expired while waiting behind
+                # earlier batches is dropped instead of padded in.
+                popped = []
+                while misses and len(popped) < self._max_batch:
+                    at, item = misses.popleft()
+                    if item[3] and time.perf_counter() > item[3]:
+                        expired += 1
+                        continue
+                    popped.append((at, item))
+                if popped:
                     at_idx = [p[0] for p in popped]
                     rows = [p[1] for p in popped]
                     queries = np.stack([r[0] for r in rows])
@@ -346,12 +447,15 @@ class ServePipeline:
         rt = getattr(self._ex, "hostio_runtime", None)
         mut = getattr(self._ex, "mutation_stats", None)
         n_gt = sum(rows for _r, rows in recalls)
+        shed = self._shed_pending
+        self._shed_pending = 0
         stats = ServeStats(
             batches=batches,
             queries=n,
             wall_s=wall,
             compile_s=compile_s,
-            qps=n / steady,
+            # Expired rows were dropped, not served: they don't inflate QPS.
+            qps=(n - expired) / steady,
             p50_ms=float(np.percentile(latencies, 50)) if latencies else 0.0,
             p95_ms=float(np.percentile(latencies, 95)) if latencies else 0.0,
             mean_recall=(
@@ -360,6 +464,8 @@ class ServePipeline:
             ),
             result_cache_hits=cache_hits,
             result_cache_hit_rate=cache_hits / n if n else 0.0,
+            shed_queries=shed,
+            expired_queries=expired,
             hostio=None if rt is None else rt.stats(),
             mutation=mut() if callable(mut) else mut,
         )

@@ -174,6 +174,7 @@ class ShardedSearchExecutor(SearchExecutor):
             self._host_partitions = None
         self._codes = jax.device_put(codes_np, model_spec)
         self._data_dev = jax.device_put(data_np, model_spec)
+        self._data_np = None    # inherited query_dim reads _data_dev
         self._codebooks = jax.device_put(
             np.asarray(codec.codebooks, np.float32), NamedSharding(mesh, P())
         )
