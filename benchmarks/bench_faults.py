@@ -35,7 +35,7 @@ import json
 import numpy as np
 
 from repro.core import SearchConfig, brute_force_knn
-from repro.runtime import SearchExecutor, ServePipeline
+from repro.runtime import SearchExecutor, ServePipeline, Telemetry
 from repro.runtime.hostio import HostIOConfig
 from repro.runtime.resilience import (
     FOREVER,
@@ -55,8 +55,38 @@ FAULT_ROW_SCHEMA = frozenset({
     "name", "phase", "qps", "recall", "p95_ms", "shed_rate",
     "expired_queries", "degraded_lanes", "retries", "hedged_gathers",
     "failover_gathers", "worker_deaths", "deadline_hits", "partitions_down",
-    "bit_exact_vs_healthy", "compile_s",
+    "bit_exact_vs_healthy", "compile_s", "telemetry",
 })
+
+
+def _telemetry_block(stats) -> dict | None:
+    """Compact registry-window summary riding each bench row.
+
+    `stats.telemetry` is the `MetricsRegistry.delta()` window captured by
+    `ServePipeline.drain()` when a `repro.runtime.telemetry.Telemetry`
+    bundle is attached; None (pipeline ran bare) stays None so the row
+    schema is stable either way. Only scalar counts go in the row -- the
+    full window (every bucket of every histogram) belongs in `--metrics-json`
+    artifacts, not in per-phase CSV-adjacent records.
+    """
+    t = stats.telemetry
+    if t is None:
+        return None
+
+    def _v(name: str):
+        m = t.get(name)
+        if m is None:
+            return 0
+        return m["count"] if m["type"] == "histogram" else m["value"]
+
+    return {
+        "queries": _v("bang_serve_queries_total"),
+        "shed": _v("bang_serve_shed_total"),
+        "expired": _v("bang_serve_expired_total"),
+        "latency_obs": _v("bang_serve_latency_seconds"),
+        "hostio_requests": _v("bang_hostio_requests_total"),
+        "degraded_lanes": _v("bang_hostio_degraded_lanes_total"),
+    }
 
 
 def fault_row(phase: str, stats, *, bit_exact: bool | None,
@@ -88,6 +118,7 @@ def fault_row(phase: str, stats, *, bit_exact: bool | None,
         "partitions_down": h.get("partitions_down", 0),
         "bit_exact_vs_healthy": bit_exact,
         "compile_s": round(compile_s, 2),
+        "telemetry": _telemetry_block(stats),
     }
 
 
@@ -100,31 +131,37 @@ def _row_derived(row: dict) -> str:
     )
 
 
-def run(report) -> None:
-    data, queries, idx = bench_dataset()
-    k = 10
-    q = np.asarray(queries[:FAULT_BATCH], np.float32)
-    gt = np.asarray(brute_force_knn(data, q, k))
-    cfg = SearchConfig(t=FAULT_T, bloom_z=16384)
-    hio = HostIOConfig(
+def fault_hostio_config() -> HostIOConfig:
+    """The bench's host-I/O configuration (importable for tests).
+
+    Health transitions are scripted by `build_schedule`, never inferred:
+    `unhealthy_after` is effectively infinite and `auto_failover` is off so
+    every phase boundary is an explicit `mark_partition_down`/`fail_over`/
+    `recover` call.
+    """
+    return HostIOConfig(
         workers=2, hot_cache_rows=HOT_CACHE_ROWS, prefetch=True,
         resilience=ResilienceConfig(
             deadline_s=0.25, hedge_s=0.05, max_retries=3,
-            # Health transitions are scripted below, never inferred.
             unhealthy_after=1_000_000, auto_failover=False,
             degraded_mode="medoid",
         ),
     )
-    ex = SearchExecutor.from_index(idx, variant="base", hostio=hio)
-    svc = ex.hostio_service
-    pipe = ServePipeline(ex, k=k, cfg=cfg, max_batch=FAULT_BATCH)
 
-    # Scripted schedule: phase name -> (setup, teardown). The same query
-    # batch replays through every phase so exactness is checkable.
+
+def build_schedule(svc, *, seed: int = 7) -> list:
+    """The scripted fault schedule: [(phase, setup, teardown), ...].
+
+    Importable so tests (tests/test_telemetry.py drives the trace-
+    attribution acceptance check over it) replay the exact sequence the
+    bench measures. The same query batch replays through every phase so
+    bit-exactness vs the healthy phase is checkable; `svc` is the
+    executor's `NeighborService`.
+    """
     def _inject(*specs):
-        svc.set_injector(FaultInjector(specs, seed=7))
+        svc.set_injector(FaultInjector(specs, seed=seed))
 
-    schedule = [
+    return [
         ("healthy", lambda: None, lambda: None),
         # count=2, not FOREVER: the retry budget (max_retries=3) must be
         # able to absorb every injected failure or lanes would degrade and
@@ -145,6 +182,25 @@ def run(report) -> None:
         ("recovered",
          lambda: svc.recover(0), lambda: None),
     ]
+
+
+def run(report) -> None:
+    data, queries, idx = bench_dataset()
+    k = 10
+    q = np.asarray(queries[:FAULT_BATCH], np.float32)
+    gt = np.asarray(brute_force_knn(data, q, k))
+    cfg = SearchConfig(t=FAULT_T, bloom_z=16384)
+    ex = SearchExecutor.from_index(
+        idx, variant="base", hostio=fault_hostio_config()
+    )
+    svc = ex.hostio_service
+    # Metrics-only bundle: rows carry a per-phase registry window without
+    # paying for tracing/profiling in the measured phases.
+    tel = Telemetry.create()
+    pipe = ServePipeline(ex, k=k, cfg=cfg, max_batch=FAULT_BATCH,
+                         telemetry=tel)
+
+    schedule = build_schedule(svc)
     try:
         pipe.submit(q, gt_ids=gt)
         _, _, warm = pipe.drain()          # compile outside every phase
@@ -171,16 +227,16 @@ def run(report) -> None:
     finally:
         pipe.close()
 
-    _overload_phase(report, ex, q, gt, cfg, k)
+    _overload_phase(report, ex, q, gt, cfg, k, tel)
 
 
-def _overload_phase(report, ex, q, gt, cfg, k) -> None:
+def _overload_phase(report, ex, q, gt, cfg, k, tel=None) -> None:
     """Closed admission under burst: bounded queue + tight deadlines."""
     svc = ex.hostio_service
     svc.reset_stats()
     pipe = ServePipeline(
         ex, k=k, cfg=cfg, max_batch=FAULT_BATCH,
-        max_queue=len(q) // 2, deadline_s=30.0,
+        max_queue=len(q) // 2, deadline_s=30.0, telemetry=tel,
     )
     try:
         # A 3x burst against a queue bounded at half one batch: 5/6 of the

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import functools
+import os
 import time
 
 import jax
@@ -31,7 +32,13 @@ def bench_dataset(n: int = 8000, d: int = 64, n_clusters: int = 64, seed: int = 
     needs distance contrast -- an isotropic 64-d gaussian has none and is
     unsearchable by ANY graph method at this dimension). R=32/L=64 mirrors
     the paper's R=64/L=200 scaled to the 8k corpus.
+
+    The ``REPRO_BENCH_N`` env var overrides ``n`` (CI shrinks the corpus
+    to keep the bench-artifact lane fast). Read inside the body so the
+    lru_cache key stays the caller's nominal n -- the env is constant for
+    a process, which is the only granularity CI needs.
     """
+    n = int(os.environ.get("REPRO_BENCH_N", n))
     data = gaussian_mixture(n, d, n_clusters=n_clusters, seed=seed)
     queries = uniform_queries(data, 256, noise=0.05, seed=seed + 1)
     idx = BangIndex.build(data, m=16, R=32, L_build=64, seed=seed)

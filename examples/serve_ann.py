@@ -166,6 +166,66 @@ recovery after failover is bit-exact by construction.
                              (-1, inf) (expired_queries)
     partition recovery       primary reads resume, bit-exact vs the
                              fault-free run
+
+observability (repro.runtime.telemetry; --metrics-json / --trace-out /
+--profile-hops). One Telemetry bundle attaches to the pipeline, executor,
+host-I/O service and (with --mutate) the mutation layer. It is executor
+*state*, never part of a compile-cache key: attached or detached, the
+traced programs, their cache keys and their results are byte-identical.
+
+  metrics (--metrics-json PATH; '-' prints Prometheus text to stdout,
+  *.prom writes Prometheus text, anything else writes the schema-versioned
+  to_json() document). Exported names:
+
+    serving    bang_serve_queries_total, bang_serve_shed_total,
+               bang_serve_expired_total, bang_serve_batches_total,
+               bang_serve_result_cache_hits_total,
+               bang_serve_compile_seconds_total (counters);
+               bang_serve_latency_seconds (histogram);
+               bang_serve_qps, bang_serve_recall (last-window gauges)
+    host I/O   bang_hostio_<counter>_total for every NeighborService
+               counter (requests, rows_gathered, host_miss_lanes,
+               cache_hit_lanes, prefetch_issued, prefetch_hits,
+               prefetch_misses, prefetch_lane_mismatches, worker_errors,
+               worker_deaths, retries, gather_failures, degraded_lanes,
+               hedged_gathers, deadline_hits, failover_gathers,
+               failovers, recoveries, enqueue_rejections);
+               bang_hostio_gather_seconds_total,
+               bang_hostio_gather_hidden_seconds_total,
+               bang_hostio_request_latency_seconds_total (time counters);
+               bang_hostio_max_queue_depth (high-watermark gauge);
+               bang_hostio_hot_cache_rows / _device_bytes / _refreshes
+               (gauges)
+    mutation   bang_mutation_inserts_total, bang_mutation_deletes_total,
+               bang_mutation_consolidations_total (counters);
+               bang_mutation_epoch, bang_mutation_generation (gauges)
+
+  tracing (--trace-out PATH): Chrome trace_event JSON -- load it in
+  chrome://tracing or Perfetto. Tracks: 'serve' (pipeline), one
+  'hostio-p<shard>' per graph partition, 'mutation', 'events'
+  (resilience instants). Span vocabulary: every submitted query row gets
+  exactly ONE terminal event -- a 'request' complete span (args: rid,
+  outcome=served|cache_hit), a 'request_shed' instant or a
+  'request_expired' instant; batch phases appear as 'admission',
+  'dispatch', 'device' and 'compile' complete spans; host gathers as
+  'gather' / 'prefetch_gather' spans (args: hop, rows, mode); mutation
+  as 'consolidate' spans + 'generation_swap' instants; resilience
+  transitions as 'failover', 'partition_down', 'recover', 'degraded'
+  and 'deadline_hit' instants.
+
+  hop profiler (--profile-hops): per-hop host-gather wall time, frontier
+  occupancy, cache-hit lanes and the modeled PQ-codes-stream bytes/hop,
+  printed as a summary table after the drain (plus jax.profiler trace
+  annotations when a device profile is being captured).
+
+  flight recorder (used by the benches/tests; see
+  repro.runtime.telemetry.flightrecorder): bounded in-memory ring of
+  typed events; each failover / partition-down / degrade / deadline
+  event triggers a postmortem dump -- a JSON document
+  {schema_version: 1, seq, reason, t_wall, context, events: [ring,
+  oldest first, ending in the 'trigger:<reason>' entry], metrics:
+  <full registry snapshot>} -- retrievable via postmortems() or
+  save_postmortems().
 """
 
 
@@ -227,6 +287,20 @@ def main() -> None:
     ap.add_argument("--autotune-cache", default="bang_autotune.json",
                     help="JSON winners file keyed by (device kind, bucket, "
                          "R, m) (default: %(default)s)")
+    ap.add_argument("--metrics-json", default="",
+                    help="dump the telemetry metrics registry after the "
+                         "run: '-' prints Prometheus text to stdout, a "
+                         "*.prom path writes Prometheus text, any other "
+                         "path writes the schema-versioned JSON document "
+                         "(see the observability section below)")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome trace_event JSON timeline of the "
+                         "run to this path (load in chrome://tracing or "
+                         "Perfetto; span vocabulary below)")
+    ap.add_argument("--profile-hops", action="store_true",
+                    help="profile the traversal's host-callback seams "
+                         "per hop (gather wall time, frontier occupancy, "
+                         "codes-stream bytes) and print a summary table")
     ap.add_argument("--mutate", action="store_true",
                     help="wrap the index in a MutableBangIndex and "
                          "interleave inserts/deletes with the serving "
@@ -255,6 +329,13 @@ def main() -> None:
     from repro.core import BangIndex, SearchConfig, brute_force_knn
     from repro.data import gaussian_mixture, uniform_queries
     from repro.runtime import ServePipeline
+
+    telemetry = None
+    if args.metrics_json or args.trace_out or args.profile_hops:
+        from repro.runtime import Telemetry
+
+        telemetry = Telemetry.create(trace=bool(args.trace_out),
+                                     profile=args.profile_hops)
 
     print(f"[serve] building index over {args.n} x {args.dim} corpus ...")
     data = gaussian_mixture(args.n, args.dim, n_clusters=48, seed=0)
@@ -304,6 +385,8 @@ def main() -> None:
         from repro.runtime import MutableBangIndex
 
         mut = MutableBangIndex(index)
+        if telemetry is not None:
+            mut.set_telemetry(telemetry)
         executor = mut.executor(args.variant, hostio=hostio)
     else:
         executor = index.executor(args.variant, hostio=hostio,
@@ -366,6 +449,7 @@ def main() -> None:
         executor, k=args.k, cfg=cfg, max_batch=args.max_batch,
         kernel_mode=args.kernel_mode, result_cache_size=args.result_cache,
         max_queue=args.max_queue, deadline_s=args.deadline_ms / 1e3,
+        telemetry=telemetry,
     )
 
     def on_batch(rep) -> None:
@@ -467,6 +551,38 @@ def main() -> None:
             f"({ms['tombstone_fraction']:.2%}), {ms['delta_points']} live "
             f"delta points, base_n={ms['base_n']}"
         )
+    if telemetry is not None and telemetry.profiler is not None:
+        p = telemetry.profiler.summary()
+        stream = ("n/a" if p["codes_stream_bytes_per_hop"] is None
+                  else f"{p['codes_stream_bytes_per_hop']} B/hop modeled")
+        print(
+            f"[serve] hop profile: {p['hops']} host-seam hops, gather wall "
+            f"p50={p['hop_wall_s_p50']*1e3:.2f}ms "
+            f"p95={p['hop_wall_s_p95']*1e3:.2f}ms "
+            f"(total {p['hop_wall_s_total']*1e3:.0f}ms) | frontier occupancy "
+            f"{p['frontier_occupancy']:.1%} "
+            f"({p['cache_hit_lanes_total']} cache-hit lanes) | "
+            f"codes stream {stream}"
+        )
+    if telemetry is not None and args.trace_out:
+        telemetry.tracer.save(args.trace_out)
+        n_ev = len(telemetry.tracer.events())
+        dropped = telemetry.tracer.dropped_events
+        print(f"[serve] Chrome trace written to {args.trace_out} "
+              f"({n_ev} events, {dropped} dropped)")
+    if telemetry is not None and args.metrics_json:
+        if args.metrics_json == "-":
+            print(telemetry.registry.to_prom(), end="")
+        elif args.metrics_json.endswith(".prom"):
+            with open(args.metrics_json, "w") as f:
+                f.write(telemetry.registry.to_prom())
+            print(f"[serve] Prometheus metrics written to {args.metrics_json}")
+        else:
+            import json
+
+            with open(args.metrics_json, "w") as f:
+                json.dump(telemetry.registry.to_json(), f, indent=2)
+            print(f"[serve] metrics JSON written to {args.metrics_json}")
     pipe.close()
     if mut is not None:
         mut.close()

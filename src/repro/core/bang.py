@@ -133,6 +133,40 @@ that surface in `ServeStats`:
     partition recovery       primary reads resume;        recoveries
                              results bit-exact vs the
                              fault-free run
+
+Observability (`repro.runtime.telemetry`): one `Telemetry` bundle attaches
+to the whole serving stack (`ServePipeline(telemetry=...)` forwards to the
+executor, the host-I/O service and -- via `MutableBangIndex.set_telemetry`
+-- the mutation layer) and never perturbs it: telemetry is executor
+*state*, outside every compile-cache key, so the traced programs and their
+results are byte-identical attached or detached. Four components:
+
+  * metrics registry (always on): cumulative counters/gauges/histograms,
+    exported by `to_json()` (schema-versioned) and `to_prom()` (Prometheus
+    text exposition). Families: `bang_serve_*` (queries/shed/expired/
+    batches/result_cache_hits `_total` counters, `compile_seconds_total`,
+    `latency_seconds` histogram, `qps`/`recall` last-window gauges),
+    `bang_hostio_<counter>_total` for every NeighborService counter plus
+    `max_queue_depth` (high-watermark gauge), `gather_seconds_total`/
+    `gather_hidden_seconds_total`/`request_latency_seconds_total`, and the
+    hot-cache gauges (`hot_cache_rows`/`device_bytes`/`refreshes`), and
+    `bang_mutation_*` (inserts/deletes/consolidations counters, epoch/
+    generation gauges). Per-drain windows surface as `ServeStats.
+    telemetry` (a `registry.delta()` view over the cumulative registry).
+  * tracer (opt-in): Chrome trace-event JSON timeline; span vocabulary in
+    `repro.runtime.telemetry.tracing` -- `request`/`request_shed`/
+    `request_expired` (exactly one per submitted row), `admission`/
+    `dispatch`/`device`/`compile` batch spans, per-partition `gather`/
+    `prefetch_gather` hostio spans, `consolidate` mutation spans, and
+    `failover`/`partition_down`/`recover`/`degraded`/`deadline_hit`
+    resilience instants.
+  * hop profiler (opt-in): per-hop host-gather wall time, frontier
+    occupancy, cache-hit lanes, and the modeled codes-stream bytes/hop at
+    the host-callback seams the traversal already crosses.
+  * flight recorder (opt-in): bounded event ring; every resilience
+    transition (failover/partition-down/degrade/deadline) triggers a
+    structured postmortem dump (`schema_version`, `reason`, `context`,
+    ring `events`, registry `metrics` snapshot).
 """
 from __future__ import annotations
 

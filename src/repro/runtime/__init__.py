@@ -7,6 +7,9 @@
 #   mutation    -- streaming mutability: live insert/delete + consolidation
 #   resilience  -- fault injection + fault handling for the host-I/O tier
 #                  (deadlines/retries/hedging, failover, degraded serving)
+#   telemetry   -- unified observability: metrics registry + exporters,
+#                  request tracing (Chrome trace JSON), per-hop profiling,
+#                  fault flight recorder
 from .executor import SearchExecutor, SearchHandle, bucket_size, pad_batch  # noqa: F401
 from .hostio import HostIOConfig, HostIORuntime, NeighborService  # noqa: F401
 from .resilience import (  # noqa: F401
@@ -17,4 +20,11 @@ from .resilience import (  # noqa: F401
 from .mutation import DeltaGraph, MutableBangIndex, MutableSearchExecutor  # noqa: F401
 from .serving import BatchReport, ServePipeline, ServeStats  # noqa: F401
 from .sharded import SHARDED_VARIANTS, ShardedSearchExecutor  # noqa: F401
+from .telemetry import (  # noqa: F401
+    FlightRecorder,
+    HopProfiler,
+    MetricsRegistry,
+    Telemetry,
+    Tracer,
+)
 from .train_loop import TrainLoopConfig, train_loop  # noqa: F401

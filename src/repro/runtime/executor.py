@@ -201,6 +201,11 @@ class SearchExecutor:
         self._cache: dict[Any, Any] = {}
         self.trace_counts: dict[Any, int] = {}
         self.compile_s_total = 0.0
+        # Observability bundle (repro.runtime.telemetry.Telemetry), attached
+        # via set_telemetry. Executor *state*, deliberately NOT part of the
+        # compile-cache key: attaching/detaching telemetry must never retrace
+        # or recompile anything (test-asserted in tests/test_telemetry.py).
+        self.telemetry = None
 
     @classmethod
     def from_index(cls, index, variant: str = "inmem", **kw) -> "SearchExecutor":
@@ -228,6 +233,20 @@ class SearchExecutor:
         """The live NeighborService (None unless hostio is configured)."""
         rt = self.hostio_runtime
         return None if rt is None else rt.service
+
+    def set_telemetry(self, telemetry) -> "SearchExecutor":
+        """Attach (or detach, with None) a telemetry bundle.
+
+        Forwards to the host-I/O runtime when present so hostio counters,
+        gather spans and fault postmortems report through the same bundle.
+        Pure host-side state: the compile cache, its keys and every traced
+        program are byte-identical with or without telemetry.
+        """
+        self.telemetry = telemetry
+        rt = self.hostio_runtime
+        if rt is not None:
+            rt.set_telemetry(telemetry)
+        return self
 
     @property
     def query_dim(self) -> int | None:
@@ -296,6 +315,18 @@ class SearchExecutor:
         compile_s = time.perf_counter() - t0
         self.compile_s_total += compile_s
         self._cache[key] = compiled
+        tel = self.telemetry
+        if tel is not None:
+            tel.registry.counter(
+                "bang_serve_compile_seconds_total",
+                "wall seconds spent compiling search executables",
+            ).inc(compile_s)
+            if tel.tracer is not None:
+                tr = tel.tracer
+                t1 = time.perf_counter()
+                tr.complete("compile", tr.at_us(t1 - compile_s), tr.at_us(t1),
+                            track="serve", bucket=bucket, k=k,
+                            kernel_mode=cfg.kernel_mode)
         return compiled, compile_s
 
     def _compile(self, key, bucket: int, d: int, k: int, rerank: bool,
@@ -508,7 +539,23 @@ class SearchExecutor:
             if self._with_tombstones else None
         )
         t0 = time.perf_counter()
-        ids, dists, n_hops, n_iters = self._run(compiled, q_dev, tomb_dev)
+        tel = self.telemetry
+        if tel is not None and tel.profiler is not None:
+            # Stamp kernel metadata for codes-stream accounting and bracket
+            # the dispatch with a jax.profiler annotation so device
+            # timelines carry the same names as our Chrome trace. Host-side
+            # only: the compiled program is the same object either way.
+            _, m, n_block = self.autotune_shape()
+            tel.profiler.set_kernel_info(
+                kernel_mode=cfg.kernel_mode, batch=bucket, n=n_block, m=m,
+                tile_rows=cfg.codes_tile_rows,
+            )
+            with tel.profiler.annotate(
+                    f"bang_dispatch:{cfg.kernel_mode}:b{bucket}"):
+                ids, dists, n_hops, n_iters = self._run(
+                    compiled, q_dev, tomb_dev)
+        else:
+            ids, dists, n_hops, n_iters = self._run(compiled, q_dev, tomb_dev)
         return SearchHandle(
             ids=ids, dists=dists, n_hops=n_hops, n_iters=n_iters,
             batch=B, bucket=bucket, dispatch_t=t0, compile_s=compile_s,

@@ -136,6 +136,29 @@ class HostIORuntime:
     def stop(self) -> None:
         self.service.stop()
 
+    def set_telemetry(self, telemetry) -> None:
+        """Attach a `repro.runtime.telemetry.Telemetry` bundle.
+
+        Forwards to the service (counter mirroring, gather spans, fault
+        postmortems) and, when a hot cache is present, publishes its
+        static footprint as gauges -- a router scraping `to_prom()` sees
+        the device-memory cost of each replica's cache next to its
+        measured hit rate.
+        """
+        self.service.set_telemetry(telemetry)
+        if self.cache is not None:
+            self.cache.set_telemetry(telemetry)
+        if telemetry is not None and self.cache is not None:
+            reg = telemetry.registry
+            reg.gauge(
+                "bang_hostio_hot_cache_rows",
+                "adjacency rows pinned in device memory",
+            ).set(self.cache.n_rows)
+            reg.gauge(
+                "bang_hostio_hot_cache_device_bytes",
+                "device bytes held by the hot-adjacency cache",
+            ).set(self.cache.device_bytes())
+
     def stats(self) -> dict:
         s = self.service.stats()
         s["hot_cache_rows"] = 0 if self.cache is None else self.cache.n_rows

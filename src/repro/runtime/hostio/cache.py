@@ -76,6 +76,23 @@ class HotAdjacencyCache:
         # replicated constants inside shard_map bodies.
         self._slot_of = jnp.asarray(slot_of)
         self._rows = jnp.asarray(np.ascontiguousarray(adjacency[hot]))
+        # Observability: consolidation-driven re-uploads, surfaced through
+        # HostIORuntime.set_telemetry as bang_hostio_hot_cache_refreshes.
+        self.refreshes = 0
+        self._tel = None
+
+    def set_telemetry(self, telemetry) -> None:
+        """Attach a telemetry bundle (refresh-count gauge mirroring)."""
+        self._tel = telemetry
+        self._publish_refreshes()
+
+    def _publish_refreshes(self) -> None:
+        tel = self._tel
+        if tel is not None:
+            tel.registry.gauge(
+                "bang_hostio_hot_cache_refreshes",
+                "pinned-row re-uploads after consolidations",
+            ).set(self.refreshes)
 
     # ------------------------------------------------------------- inspection
     def device_bytes(self) -> int:
@@ -119,6 +136,8 @@ class HotAdjacencyCache:
         self._rows = jnp.asarray(
             np.ascontiguousarray(adjacency[self.hot_ids])
         )
+        self.refreshes += 1
+        self._publish_refreshes()
 
     # ------------------------------------------------------------------ probe
     def probe(self, u):

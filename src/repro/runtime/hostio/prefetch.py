@@ -25,7 +25,11 @@ selected *before* the convergence masking, so `collect` validates the issued
 lanes and inline-gathers any that changed -- results are bit-exact vs the
 synchronous path regardless of prediction quality, and the service's
 `overlap_fraction` stat reports how much gather time the prefetch actually
-hid.
+hid. With a telemetry tracer attached to the service
+(`repro.runtime.telemetry`), each redeemed ticket additionally lands on
+the Chrome trace timeline as a `prefetch_gather` span (issue -> done, with
+its hidden share) next to the blocking `gather` span that collected it, so
+the overlap the scalar summarises is visually auditable per hop.
 
 `make_base_exchange` / `make_shard_exchange` build the (neighbor_fn,
 prefetch_fn) pair for the two host-graph placements ("base" /

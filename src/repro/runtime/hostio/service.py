@@ -27,6 +27,16 @@ queue, no concurrency and no way to measure contention.
     through the callback), prefetch hit/miss/mismatch counts, and the
     measured `overlap_fraction` -- the share of host gather time hidden
     behind device compute (`stats()`).
+  * **Telemetry** (`repro.runtime.telemetry`). `set_telemetry()` attaches
+    a `Telemetry` bundle: every counter bump mirrors into the process
+    metrics registry as `bang_hostio_*` (cumulative -- registry metrics
+    ignore `reset_stats()` windows), gathers emit per-partition `gather`
+    spans on `hostio-p<shard>` trace tracks, the per-hop profiler hooks
+    the `_account` seam, and resilience transitions (partition down,
+    failover, recovery, degraded lanes, deadline expiry) both mark the
+    trace timeline and trigger flight-recorder postmortem dumps. All of
+    it is host-side and detached by default: the traced device program
+    and the compile cache are unaffected either way.
   * **Fault handling** (`repro.runtime.resilience`). A `ResilienceConfig`
     turns on deadline-aware gathers with retry + exponential backoff on
     transient errors, hedged inline re-issue when a pooled gather or a
@@ -134,6 +144,7 @@ class NeighborService:
         self.name = name
         self.resilience = resilience
         self._injector = injector
+        self._tel = None
         # Medoid adjacency row, pinned at construction: degraded-mode
         # substitution must not read the (possibly down) owning partition.
         self._medoid_row: np.ndarray | None = None
@@ -283,11 +294,42 @@ class NeighborService:
     def set_injector(self, injector) -> None:
         """Attach (or detach, with None) a scripted FaultInjector."""
         self._injector = injector
+        tel = self._tel
+        if injector is not None and tel is not None \
+                and tel.recorder is not None:
+            injector.set_recorder(tel.recorder)
+
+    def set_telemetry(self, telemetry) -> None:
+        """Attach (or detach, with None) a `telemetry.Telemetry` bundle.
+
+        Pure host-side state: changes nothing about traced programs or
+        counter windows, only adds mirroring/trace/postmortem emission.
+        """
+        self._tel = telemetry
+        inj = self._injector
+        if inj is not None and telemetry is not None \
+                and telemetry.recorder is not None:
+            inj.set_recorder(telemetry.recorder)
+
+    def _resilience_event(self, name: str, *, postmortem: bool,
+                          **fields) -> None:
+        """Timeline instant + ring entry (+ postmortem dump) for one
+        health/fault transition. Called with self._lock NOT held: the
+        flight recorder snapshots the metrics registry, and keeping the
+        service lock out of that keeps lock ordering one-directional."""
+        tel = self._tel
+        if tel is None:
+            return
+        tel.event(name, **fields)
+        if postmortem and tel.recorder is not None:
+            tel.recorder.trigger(name, **fields)
 
     def mark_partition_down(self, shard: int) -> None:
         """Mark a host partition unreachable (reads degrade or fail over)."""
         with self._lock:
             self._down.add(int(shard))
+        self._resilience_event("partition_down", postmortem=True,
+                               shard=int(shard))
 
     def fail_over(self, shard: int) -> None:
         """Mark a partition down AND pin a replica of its rows.
@@ -301,9 +343,12 @@ class NeighborService:
         shard = int(shard)
         with self._lock:
             self._down.add(shard)
-            if shard not in self._failover:
+            pinned = shard not in self._failover
+            if pinned:
                 self._failover[shard] = self._parts[shard].copy()
                 self._bump_locked(failovers=1)
+        if pinned:
+            self._resilience_event("failover", postmortem=True, shard=shard)
 
     def recover(self, shard: int) -> None:
         """Bring a partition back: primary reads resume (bit-exact)."""
@@ -315,6 +360,8 @@ class NeighborService:
             self._fail_streak.pop(shard, None)
             if was:
                 self._bump_locked(recoveries=1)
+        if was:
+            self._resilience_event("recover", postmortem=False, shard=shard)
 
     def partition_state(self, shard: int) -> str:
         """'up', 'down' (degraded lanes) or 'failover' (replica reads)."""
@@ -348,6 +395,7 @@ class NeighborService:
     def _note_gather_failure(self, shard: int) -> None:
         """Record one failed primary read; mark down on a long streak."""
         res = self.resilience
+        auto_down = auto_failover = False
         with self._lock:
             self._bump_locked(gather_failures=1)
             streak = self._fail_streak.get(shard, 0) + 1
@@ -355,11 +403,20 @@ class NeighborService:
             if (res is not None and streak >= res.unhealthy_after
                     and shard not in self._down):
                 self._down.add(shard)
+                auto_down = True
                 if res.auto_failover and shard not in self._failover:
                     self._failover[shard] = self._parts[shard].copy()
                     self._bump_locked(failovers=1)
+                    auto_failover = True
+        if auto_failover:
+            self._resilience_event("failover", postmortem=True, shard=shard,
+                                   auto=True, streak=streak)
+        elif auto_down:
+            self._resilience_event("partition_down", postmortem=True,
+                                   shard=shard, auto=True, streak=streak)
 
-    def _degrade_lanes(self, out: np.ndarray, lanes: np.ndarray) -> None:
+    def _degrade_lanes(self, out: np.ndarray, lanes: np.ndarray,
+                       shard: int) -> None:
         """Serve unfetchable lanes without host reads.
 
         "medoid": substitute the pinned medoid adjacency row -- the search
@@ -375,6 +432,8 @@ class NeighborService:
         else:
             out[lanes] = 0
         self._bump(degraded_lanes=int(lanes.size))
+        self._resilience_event("degraded", postmortem=True, shard=int(shard),
+                               lanes=int(lanes.size), mode=mode)
 
     def _gather_chunk(self, shard: int, rel: np.ndarray, out: np.ndarray,
                       lanes: np.ndarray, deadline: float) -> None:
@@ -400,6 +459,9 @@ class NeighborService:
                     remaining = deadline - time.perf_counter()
                     if remaining <= 0:
                         self._bump(deadline_hits=1)
+                        self._resilience_event(
+                            "deadline_hit", postmortem=True,
+                            shard=int(shard), attempt=attempt)
                         break
                 else:
                     remaining = -1.0
@@ -415,7 +477,7 @@ class NeighborService:
                 bumps["retries"] = attempt
             self._bump(**bumps)
             return
-        self._degrade_lanes(out, lanes)
+        self._degrade_lanes(out, lanes, shard)
 
     # -------------------------------------------------------------- counters
     def reset_stats(self) -> None:
@@ -454,6 +516,11 @@ class NeighborService:
                 self._c[k] = max(self._c[k], v)
             else:
                 self._c[k] += v
+        tel = self._tel
+        if tel is not None:
+            # Registry lock is strictly innermost under self._lock; nothing
+            # in the registry ever calls back into the service.
+            tel.bump_hostio(kw)
 
     def _bump(self, **kw) -> None:
         with self._lock:
@@ -601,8 +668,15 @@ class NeighborService:
         shard = int(np.asarray(shard))
         own = np.asarray(own, bool)
         out = self._gather(shard, rel, own)
-        self._account(shard, own, np.asarray(cache_hit, bool))
-        self._bump(requests=1, latency_s_total=time.perf_counter() - t0)
+        t1 = time.perf_counter()
+        self._account(shard, own, np.asarray(cache_hit, bool), t1 - t0)
+        self._bump(requests=1, latency_s_total=t1 - t0)
+        tel = self._tel
+        if tel is not None and tel.tracer is not None:
+            tr = tel.tracer
+            tr.complete("gather", tr.at_us(t0), tr.at_us(t1),
+                        track=f"hostio-p{shard}", mode="sync",
+                        rows=int(own.sum()))
         return out
 
     def issue(self, shard, rel, own) -> np.ndarray:
@@ -665,6 +739,7 @@ class NeighborService:
             # Stalled ticket: hedge inline rather than block the program.
             self._bump(hedged_gathers=1)
             p = None
+        tel = self._tel
         if p is None or p.out is None:
             out = self._gather(shard, rel, own)
             self._bump(prefetch_misses=1)
@@ -675,6 +750,15 @@ class NeighborService:
                 prefetch_hits=1, gather_s_total=dur,
                 gather_s_hidden=min(hidden, dur),
             )
+            if tel is not None and tel.tracer is not None:
+                # The background gather as the device saw it: the span runs
+                # issue -> done, the hidden share is what overlapped device
+                # compute (overlap_fraction, but now per ticket on the
+                # timeline).
+                tr = tel.tracer
+                tr.complete("prefetch_gather", tr.at_us(p.t_issue),
+                            tr.at_us(p.t_done), track=f"hostio-p{shard}",
+                            seq=seq, hidden_s=min(hidden, dur))
             reuse = (p.own == own) & (~own | (p.rel == rel))
             if reuse.all():
                 out = p.out
@@ -685,18 +769,35 @@ class NeighborService:
                 # Issued-but-unwanted lanes must contribute 0 again.
                 out = np.where((own | reuse)[:, None], out, 0).astype(np.int32)
                 self._bump(prefetch_lane_mismatches=int(redo.sum()))
-        self._account(shard, own, np.asarray(cache_hit, bool))
-        self._bump(requests=1, latency_s_total=time.perf_counter() - t0)
+        t1 = time.perf_counter()
+        self._account(shard, own, np.asarray(cache_hit, bool), t1 - t0)
+        self._bump(requests=1, latency_s_total=t1 - t0)
+        if tel is not None and tel.tracer is not None:
+            tr = tel.tracer
+            tr.complete("gather", tr.at_us(t0), tr.at_us(t1),
+                        track=f"hostio-p{shard}", mode="collect", seq=seq,
+                        rows=int(own.sum()))
         return out
 
-    def _account(self, shard: int, own: np.ndarray, cache_hit: np.ndarray):
+    def _account(self, shard: int, own: np.ndarray, cache_hit: np.ndarray,
+                 wall_s: float = 0.0):
         # Misses: every lane a request logically needed from host RAM (each
         # valid id is owned by exactly one shard, so summing over shards
         # counts each global lane once; `rows_gathered` -- counted inside
         # _gather -- additionally includes prefetch re-gathers). Hits: the
         # replicated hit mask would be counted once per model shard, so only
         # partition 0's callbacks report it.
+        own_n = int(own.sum())
+        hit_n = int(cache_hit.sum())
         self._bump(
-            host_miss_lanes=int(own.sum()),
-            **({"cache_hit_lanes": int(cache_hit.sum())} if shard == 0 else {}),
+            host_miss_lanes=own_n,
+            **({"cache_hit_lanes": hit_n} if shard == 0 else {}),
         )
+        tel = self._tel
+        if tel is not None and tel.profiler is not None:
+            # The per-hop profiler seam: one record per shard per hop.
+            # `wall_s` is the callback's device-visible blocking time.
+            tel.profiler.on_hop(
+                shard, lanes=int(own.size), own_lanes=own_n,
+                cache_hit_lanes=hit_n if shard == 0 else 0, wall_s=wall_s,
+            )

@@ -220,6 +220,12 @@ class MutableSearchExecutor:
     def mutation_stats(self) -> dict:
         return self._owner.mutation_stats()
 
+    def set_telemetry(self, telemetry) -> "MutableSearchExecutor":
+        """Forward the bundle to the owning index (and so to every inner
+        executor, across generation swaps)."""
+        self._owner.set_telemetry(telemetry)
+        return self
+
     @property
     def hostio_runtime(self):
         return self._inner().hostio_runtime
@@ -329,6 +335,40 @@ class MutableBangIndex:
         self._retired_runtimes: list[Any] = []
         self._executors: dict[Any, MutableSearchExecutor] = {}
         self.consolidate_error: BaseException | None = None
+        # Telemetry bundle; re-applied to every rebuilt inner executor so a
+        # generation swap never silently drops observability.
+        self._tel = None
+
+    # -------------------------------------------------------------- telemetry
+    def set_telemetry(self, telemetry) -> None:
+        """Attach a `repro.runtime.telemetry.Telemetry` bundle.
+
+        Mutation counters mirror into the registry
+        (`bang_mutation_*_total`, epoch/generation gauges), consolidations
+        emit `consolidate` trace spans + `generation_swap` ring events, and
+        every inner executor -- current and future generations -- forwards
+        the same bundle (host-I/O included).
+        """
+        with self._lock:
+            self._tel = telemetry
+            if telemetry is not None:
+                self._mutation_gauges_locked()
+            for _gen, ex in self._inner.values():
+                if hasattr(ex, "set_telemetry"):
+                    ex.set_telemetry(telemetry)
+
+    def _mutation_gauges_locked(self) -> None:
+        """Refresh epoch/generation gauges; caller holds self._lock."""
+        tel = self._tel
+        if tel is None:
+            return
+        reg = tel.registry
+        reg.gauge("bang_mutation_epoch",
+                  "mutation epoch (bumps on insert/delete/consolidate)"
+                  ).set(self.epoch)
+        reg.gauge("bang_mutation_generation",
+                  "consolidation generation of the serving snapshot"
+                  ).set(self.generation)
 
     # ------------------------------------------------------------ inspection
     @property
@@ -389,6 +429,11 @@ class MutableBangIndex:
             for i, row in enumerate(v):
                 ids[i] = base_n + self._delta.add(row)
             self.epoch += 1
+            if self._tel is not None:
+                self._tel.registry.counter(
+                    "bang_mutation_inserts_total", "vectors inserted",
+                ).inc(v.shape[0])
+                self._mutation_gauges_locked()
             return ids
 
     def delete(self, ids) -> None:
@@ -417,6 +462,11 @@ class MutableBangIndex:
                 else:
                     raise ValueError(f"unknown id {i} (id space is [0, {hi}))")
             self.epoch += 1
+            if self._tel is not None:
+                self._tel.registry.counter(
+                    "bang_mutation_deletes_total", "ids tombstoned/killed",
+                ).inc(ids.size)
+                self._mutation_gauges_locked()
 
     # ------------------------------------------------------------- executors
     def executor(self, variant: str = "inmem", *, mesh=None,
@@ -473,6 +523,8 @@ class MutableBangIndex:
                     self._index, variant=variant, hostio=hostio,
                     with_tombstones=True,
                 )
+            if self._tel is not None and hasattr(ex, "set_telemetry"):
+                ex.set_telemetry(self._tel)
             self._inner[key] = (self.generation, ex)
             return ex
 
@@ -504,7 +556,12 @@ class MutableBangIndex:
         post-snapshot inserts rebased into the new delta with their global
         ids unchanged). Returns the post-swap `mutation_stats()`.
         """
+        tel = self._tel
+        span = None
         with self._lock:
+            if tel is not None:
+                span = tel.span("consolidate", track="mutation",
+                                from_generation=self.generation)
             snap_index = self._index
             snap_tomb = self._tombstones.copy()
             snap_vecs = self._delta.vectors.copy()
@@ -649,6 +706,17 @@ class MutableBangIndex:
             self.generation += 1
             self.epoch += 1
             self._consolidations += 1
+            if tel is not None:
+                tel.registry.counter(
+                    "bang_mutation_consolidations_total",
+                    "background consolidations completed",
+                ).inc()
+                self._mutation_gauges_locked()
+                tel.event("generation_swap", track="mutation",
+                          generation=self.generation, folded=snap_len,
+                          retired=int(new_tomb.sum()))
+                if span is not None:
+                    span.end(to_generation=self.generation)
             return self.mutation_stats()
 
     def consolidate_async(self) -> threading.Thread:

@@ -131,12 +131,19 @@ class FaultInjector:
     recall/latency impact they caused.
     """
 
-    def __init__(self, specs, seed: int = 0) -> None:
+    def __init__(self, specs, seed: int = 0, *, recorder=None) -> None:
         self.specs = tuple(specs)
         self.seed = int(seed)
         self._lock = threading.Lock()
         self._ordinals: dict[tuple[str, int], int] = {}
         self._fired: dict[str, int] = {k: 0 for k in FAULT_KINDS}
+        self._recorder = recorder
+
+    def set_recorder(self, recorder) -> None:
+        """Attach a telemetry `FlightRecorder`: every fired spec leaves a
+        `fault_injected` ring entry, so a postmortem dump shows exactly
+        which injected events preceded the failure it explains."""
+        self._recorder = recorder
 
     # ----------------------------------------------------------- internals
     def _decide(self, spec: FaultSpec, ordinal: int) -> bool:
@@ -166,7 +173,13 @@ class FaultInjector:
             ]
             for s in hits:
                 self._fired[s.kind] += 1
-            return hits
+        rec = self._recorder
+        if rec is not None:
+            # Outside the ordinal lock: the recorder has its own.
+            for s in hits:
+                rec.record("fault_injected", fault=s.kind, shard=shard,
+                           hook=hook, ordinal=ordinal)
+        return hits
 
     # --------------------------------------------------------------- hooks
     def on_worker(self, shard: int) -> None:

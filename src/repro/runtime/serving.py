@@ -41,6 +41,17 @@ work of the next query batch with the device-side search of the current one.
     counters surface as `ServeStats.shed_queries` / `expired_queries`;
     host-side fault handling (retries, hedges, degraded lanes, failover)
     reports through `ServeStats.hostio` (see `repro.runtime.resilience`).
+  * **Telemetry.** `telemetry=` (a `repro.runtime.telemetry.Telemetry`)
+    attaches the observability bundle to the pipeline AND its executor
+    (which forwards to the host-I/O runtime): serve counters mirror into
+    the metrics registry (`bang_serve_*`), every submitted row gets a
+    request id whose lifecycle lands on the Chrome trace timeline as
+    exactly one `request` span (outcome served/cache_hit) or
+    `request_shed`/`request_expired` instant, micro-batches emit
+    `admission`/`dispatch`/`device`/`compile` spans, and
+    `ServeStats.telemetry` carries the registry delta over the drain
+    window. Detached (the default) the pipeline behaves identically --
+    telemetry never touches compile caches or traced programs.
 
 The pipeline is executor-agnostic: any object with the `SearchExecutor`
 dispatch/finish contract works, including `ShardedSearchExecutor` — then
@@ -57,6 +68,7 @@ Typical use::
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import time
 from collections import OrderedDict, deque
@@ -102,6 +114,10 @@ class ServeStats:
     expired_queries: int = 0    # accepted rows dropped at dispatch: deadline
     hostio: dict | None = None  # NeighborService counter snapshot, if any
     mutation: dict | None = None  # MutableSearchExecutor counters, if any
+    # Registry window: metrics delta over this drain (telemetry attached
+    # only). The cumulative registry is the source of truth; this is the
+    # per-window view of it.
+    telemetry: dict | None = None
 
 
 class ServePipeline:
@@ -124,6 +140,7 @@ class ServePipeline:
         result_cache_size: int = 0,
         max_queue: int = 0,
         deadline_s: float = 0.0,
+        telemetry=None,
     ) -> None:
         if max_batch <= 0:
             raise ValueError("max_batch must be positive")
@@ -146,8 +163,24 @@ class ServePipeline:
         self._max_queue = max_queue
         self._deadline_s = deadline_s
         self._shed_pending = 0      # sheds since the last drain() report
+        # Telemetry (repro.runtime.telemetry.Telemetry or None): the
+        # pipeline attaches the bundle to its executor too, which forwards
+        # it to the host-I/O runtime -- one bundle observes the whole
+        # serving stack. Every submitted row gets a request id so trace
+        # spans attribute each one exactly once (served / cache_hit /
+        # shed / expired).
+        self._tel = telemetry
+        self._next_rid = 0
+        # Window anchor for ServeStats.telemetry: "since the last drain",
+        # NOT "since drain start" -- sheds happen inside submit(), and the
+        # window must agree with ServeStats.shed_queries about them.
+        self._reg_snap = None if telemetry is None \
+            else telemetry.registry.snapshot()
+        if telemetry is not None and hasattr(executor, "set_telemetry"):
+            executor.set_telemetry(telemetry)
         # queue rows: (query row (d,), enqueue timestamp, gt row or None,
-        #              absolute deadline (perf_counter seconds; 0 = none))
+        #              absolute deadline (perf_counter seconds; 0 = none),
+        #              request id)
         self._queue: deque = deque()
         # Cross-batch query-result LRU: exact query bytes -> (ids, dists)
         # rows, exactly as the executor returned them (bit-identical hits).
@@ -257,7 +290,7 @@ class ServePipeline:
         if ttl < 0:
             raise ValueError(f"deadline_s must be >= 0, got {ttl}")
         deadline = now + ttl if ttl > 0 else 0.0
-        accept = q.shape[0]
+        accept = total = q.shape[0]
         if self._max_queue > 0:
             room = max(self._max_queue - len(self._queue), 0)
             if accept > room:
@@ -265,10 +298,30 @@ class ServePipeline:
                 # never enqueued, so they can be counted exactly once.
                 self._shed_pending += accept - room
                 accept = room
+        rid0 = self._next_rid
+        self._next_rid += total
         for i in range(accept):
             self._queue.append(
-                (q[i], now, None if gt is None else gt[i], deadline)
+                (q[i], now, None if gt is None else gt[i], deadline, rid0 + i)
             )
+        tel = self._tel
+        if tel is not None:
+            shed = total - accept
+            if shed:
+                tel.registry.counter(
+                    "bang_serve_shed_total",
+                    "rows rejected by admission control at submit",
+                ).inc(shed)
+                # One instant per shed row: the acceptance contract is that
+                # every submitted rid is attributable on the timeline.
+                for i in range(accept, total):
+                    tel.instant("request_shed", track="serve", rid=rid0 + i)
+                    tel.record("request_shed", rid=rid0 + i)
+            if tel.tracer is not None:
+                tr = tel.tracer
+                tr.complete("admission", tr.at_us(now), tr.now_us(),
+                            track="serve", submitted=total, accepted=accept,
+                            shed=shed, rid0=rid0)
         return accept
 
     # ------------------------------------------------------- result cache
@@ -319,6 +372,13 @@ class ServePipeline:
         compile_s = 0.0
         cache_hits = 0
         expired = 0
+        tel = self._tel
+        tr = None if tel is None else tel.tracer
+        # Window anchor set at construction / previous drain end:
+        # ServeStats.telemetry is the delta since then, so submit-time
+        # activity (sheds, hostio prefetch) lands in the window it is
+        # reported in (ServeStats.shed_queries counts the same way).
+        reg_snap = self._reg_snap
         t_start = time.perf_counter()
 
         # Result-cache pre-pass: rows seen in an earlier drain are answered
@@ -329,17 +389,25 @@ class ServePipeline:
         misses: deque = deque()
         hit_gt_ids: list[np.ndarray] = []
         hit_gt_true: list[np.ndarray] = []
-        for at, (row, t_enq, gt, dl) in enumerate(self._queue):
+        for at, (row, t_enq, gt, dl, rid) in enumerate(self._queue):
             if dl and time.perf_counter() > dl:
                 expired += 1
+                if tel is not None:
+                    tel.instant("request_expired", track="serve", rid=rid,
+                                where="prepass")
+                    tel.record("request_expired", rid=rid)
                 continue
             cached = self._cache_lookup(row)
             if cached is None:
-                misses.append((at, (row, t_enq, gt, dl)))
+                misses.append((at, (row, t_enq, gt, dl, rid)))
                 continue
             ids_out[at], dists_out[at] = cached
             cache_hits += 1
-            latencies.append((time.perf_counter() - t_enq) * 1e3)
+            now = time.perf_counter()
+            latencies.append((now - t_enq) * 1e3)
+            if tr is not None:
+                tr.complete("request", tr.at_us(t_enq), tr.at_us(now),
+                            track="serve", rid=rid, outcome="cache_hit")
             if gt is not None:
                 hit_gt_ids.append(ids_out[at])
                 hit_gt_true.append(gt)
@@ -366,6 +434,10 @@ class ServePipeline:
                     at, item = misses.popleft()
                     if item[3] and time.perf_counter() > item[3]:
                         expired += 1
+                        if tel is not None:
+                            tel.instant("request_expired", track="serve",
+                                        rid=item[4], where="dispatch")
+                            tel.record("request_expired", rid=item[4])
                         continue
                     popped.append((at, item))
                 if popped:
@@ -382,6 +454,13 @@ class ServePipeline:
                         # back so the outer handler re-enqueues them.
                         misses.extendleft(reversed(popped))
                         raise
+                    if tr is not None:
+                        # Host-side dispatch work (bucketing, padding,
+                        # upload, async launch); device compute shows up as
+                        # the following `device` span.
+                        tr.complete("dispatch", tr.at_us(t_disp), tr.now_us(),
+                                    track="serve", size=len(rows),
+                                    bucket=handle.bucket)
                     nxt = (rows, at_idx, handle, t_disp)
 
                 if inflight is not None:
@@ -395,6 +474,20 @@ class ServePipeline:
                     self._cache_insert(np.stack([r[0] for r in rows]), ids, dists)
                     latencies.extend((ready - r[1]) * 1e3 for r in rows)
                     compile_s += handle.compile_s
+                    if tr is not None:
+                        # Device span: async launch -> results on host. Then
+                        # one `request` span per row, closing each rid's
+                        # lifecycle (queue time is the span's pre-dispatch
+                        # portion, stamped as an arg).
+                        tr.complete("device", tr.at_us(t_disp),
+                                    tr.at_us(ready), track="serve",
+                                    size=len(rows), bucket=handle.bucket,
+                                    compile_s=handle.compile_s)
+                        for r in rows:
+                            tr.complete("request", tr.at_us(r[1]),
+                                        tr.at_us(ready), track="serve",
+                                        rid=r[4], outcome="served",
+                                        queue_s=max(t_disp - r[1], 0.0))
                     # Score whichever rows carry ground truth (a micro-batch
                     # may mix gt and non-gt rows across submit() calls).
                     # Truncate to min(k, gt width) so wide gt doesn't deflate
@@ -449,25 +542,66 @@ class ServePipeline:
         n_gt = sum(rows for _r, rows in recalls)
         shed = self._shed_pending
         self._shed_pending = 0
+        qps = (n - expired) / steady
+        mean_recall = (
+            float(sum(r * rows for r, rows in recalls) / n_gt)
+            if n_gt else None
+        )
+        tel_window = None
+        if tel is not None:
+            reg = tel.registry
+            reg.counter(
+                "bang_serve_queries_total", "rows drained (incl. expired)",
+            ).inc(n)
+            reg.counter(
+                "bang_serve_batches_total", "micro-batches dispatched",
+            ).inc(batches)
+            reg.counter(
+                "bang_serve_expired_total",
+                "accepted rows dropped at dispatch (deadline passed)",
+            ).inc(expired)
+            reg.counter(
+                "bang_serve_result_cache_hits_total",
+                "rows served from the query-result LRU",
+            ).inc(cache_hits)
+            lat = reg.histogram(
+                "bang_serve_latency_seconds",
+                "per-row latency, enqueue -> results ready",
+            )
+            for ms in latencies:
+                lat.observe(ms / 1e3)
+            reg.gauge(
+                "bang_serve_qps", "steady-state QPS of the last drain window",
+            ).set(qps)
+            if mean_recall is not None:
+                reg.gauge(
+                    "bang_serve_recall",
+                    "row-weighted mean recall@k of the last drain window",
+                ).set(mean_recall)
+            tel_window = reg.delta(reg_snap)
+            # Re-anchor: the next window starts where this one ended.
+            self._reg_snap = reg.snapshot()
+        # Snapshots are deep-copied: hostio/mutation stats reach callers
+        # (benchmarks, dashboards) that hold them across later drains, and
+        # nothing a caller does to its copy may alias live counter state
+        # (tests/test_serve_stats.py pins this with a mutating reader).
         stats = ServeStats(
             batches=batches,
             queries=n,
             wall_s=wall,
             compile_s=compile_s,
             # Expired rows were dropped, not served: they don't inflate QPS.
-            qps=(n - expired) / steady,
+            qps=qps,
             p50_ms=float(np.percentile(latencies, 50)) if latencies else 0.0,
             p95_ms=float(np.percentile(latencies, 95)) if latencies else 0.0,
-            mean_recall=(
-                float(sum(r * rows for r, rows in recalls) / n_gt)
-                if n_gt else None
-            ),
+            mean_recall=mean_recall,
             result_cache_hits=cache_hits,
             result_cache_hit_rate=cache_hits / n if n else 0.0,
             shed_queries=shed,
             expired_queries=expired,
-            hostio=None if rt is None else rt.stats(),
-            mutation=mut() if callable(mut) else mut,
+            hostio=None if rt is None else copy.deepcopy(rt.stats()),
+            mutation=copy.deepcopy(mut() if callable(mut) else mut),
+            telemetry=tel_window,
         )
         self.last_stats = stats
         return ids_out, dists_out, stats

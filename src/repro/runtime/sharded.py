@@ -41,7 +41,12 @@ asserts ids and distances both).
 The serving surface is inherited unchanged from `SearchExecutor`: shape
 buckets (rounded up to a multiple of the data-axis size so rows split
 evenly), per-(bucket, k, rerank, cfg) compiled-executable cache,
-`dispatch()`/`finish()` async pairing, `SearchStats`. `ServePipeline`
+`dispatch()`/`finish()` async pairing, `SearchStats`, and the
+`set_telemetry()` observability hook (`repro.runtime.telemetry`) -- one
+attached bundle observes compile spans, dispatch profiling and, for
+"sharded-base", every shard partition's hostio counters and gather spans
+through the shared `NeighborService`, without entering the compile-cache
+key. `ServePipeline`
 therefore drives either executor without knowing which one it has. That
 includes `kernel_mode`: "fused" runs the owner-shard gather+ADC inside the
 `search_step.local_adc` kernel on each shard's device-local code rows, the

@@ -20,6 +20,7 @@ Three layers under test:
 Determinism: every injector here is seeded and window-scripted, so counter
 assertions are exact, not thresholds.
 """
+import dataclasses
 import os
 import subprocess
 import sys
@@ -592,6 +593,25 @@ def test_bench_faults_row_json_schema():
     assert row["recall"] == pytest.approx(0.9125)
     assert row["degraded_lanes"] == 3 and row["partitions_down"] == 1
     assert row["bit_exact_vs_healthy"] is False
+    # No Telemetry bundle attached -> the block is None, schema unchanged.
+    assert row["telemetry"] is None
+
+    # With a registry window attached the block summarises it compactly.
+    stats_t = dataclasses.replace(stats, telemetry={
+        "bang_serve_queries_total": {"type": "counter", "value": 16.0},
+        "bang_serve_shed_total": {"type": "counter", "value": 4.0},
+        "bang_serve_latency_seconds": {
+            "type": "histogram", "count": 16, "sum": 0.02, "buckets": {},
+        },
+        "bang_hostio_degraded_lanes_total": {"type": "counter", "value": 3.0},
+    })
+    row_t = fault_row("degraded", stats_t, bit_exact=False, compile_s=1.5)
+    assert set(row_t) == set(FAULT_ROW_SCHEMA)
+    assert row_t == json.loads(json.dumps(row_t))
+    t = row_t["telemetry"]
+    assert t["queries"] == 16.0 and t["shed"] == 4.0
+    assert t["latency_obs"] == 16 and t["degraded_lanes"] == 3.0
+    assert t["expired"] == 0 and t["hostio_requests"] == 0
 
 
 # ------------------------------------------- forced-device subprocesses

@@ -1,0 +1,107 @@
+"""ServeStats hygiene: snapshot aliasing + percentile edge cases.
+
+Two regressions pinned here:
+
+  * **No aliasing.** `ServeStats.hostio` / `.mutation` are deep copies --
+    a caller that stashes (or mutilates) one drain's stats can never
+    corrupt the live service/mutation counters or a later window's view
+    (benchmarks hold rows across phases; dashboards mutate dicts in place).
+  * **Percentile math.** p50/p95 are well-defined on the degenerate
+    windows serving actually produces: empty drains (0.0, not NaN), a
+    single row (p50 == p95 == that row), and cache-hit-only windows
+    (hits have real enqueue->ready latencies even though no batch ran).
+"""
+import numpy as np
+
+from repro.core import SearchConfig
+from repro.runtime import MutableBangIndex, SearchExecutor, ServePipeline
+from repro.runtime.hostio import HostIOConfig
+
+K = 5
+CFG = SearchConfig(t=16)
+
+
+def test_hostio_snapshot_not_aliased(small_ann_index):
+    data, idx = small_ann_index
+    q = np.asarray(data[:6] + 0.01, np.float32)
+    ex = SearchExecutor.from_index(
+        idx, variant="base",
+        hostio=HostIOConfig(workers=2, hot_cache_rows=64, prefetch=True),
+    )
+    rt = ex.hostio_runtime
+    with ServePipeline(ex, k=K, cfg=CFG, max_batch=8) as pipe:
+        pipe.submit(q)
+        _, _, st1 = pipe.drain()
+        live = rt.stats()
+        assert st1.hostio == live            # same content...
+        assert st1.hostio is not live        # ...different object
+
+        # A mutating reader trashes its copy; the live counters and the
+        # next window must be unaffected.
+        st1.hostio["requests"] = -999
+        st1.hostio["cache_hit_rate"] = float("nan")
+        st1.hostio.clear()
+        assert rt.stats()["requests"] == live["requests"]
+
+        pipe.submit(q)
+        _, _, st2 = pipe.drain()
+        assert st2.hostio["requests"] >= live["requests"] > 0
+        assert 0.0 <= st2.hostio["cache_hit_rate"] <= 1.0
+
+
+def test_mutation_snapshot_not_aliased(small_ann_index):
+    data, idx = small_ann_index
+    with MutableBangIndex(idx) as mut:
+        mut.insert(np.asarray(data[:2] + 0.25, np.float32))
+        with ServePipeline(mut.executor("inmem"), k=K, cfg=CFG,
+                           max_batch=4) as pipe:
+            pipe.submit(np.asarray(data[:3], np.float32))
+            _, _, st = pipe.drain()
+            live = mut.mutation_stats()
+            assert st.mutation == live and st.mutation is not live
+
+            st.mutation["inserts"] = -1
+            st.mutation.clear()
+            assert mut.mutation_stats() == live
+
+
+def test_percentiles_empty_window(small_ann_index):
+    data, idx = small_ann_index
+    with ServePipeline(SearchExecutor.from_index(idx, variant="inmem"),
+                       k=K, cfg=CFG, max_batch=4) as pipe:
+        ids, dists, st = pipe.drain()        # nothing submitted
+        assert ids.shape == (0, K) and dists.shape == (0, K)
+        assert st.queries == 0 and st.batches == 0
+        assert st.p50_ms == 0.0 and st.p95_ms == 0.0  # defined, not NaN
+        assert st.qps == 0.0 and st.mean_recall is None
+
+
+def test_percentiles_single_row_window(small_ann_index):
+    data, idx = small_ann_index
+    with ServePipeline(SearchExecutor.from_index(idx, variant="inmem"),
+                       k=K, cfg=CFG, max_batch=4) as pipe:
+        pipe.submit(np.asarray(data[0], np.float32))
+        _, _, st = pipe.drain()
+        assert st.queries == 1
+        # one observation: every percentile IS that observation
+        assert st.p50_ms == st.p95_ms > 0.0
+        assert np.isfinite(st.p50_ms)
+
+
+def test_percentiles_cache_hit_only_window(small_ann_index):
+    data, idx = small_ann_index
+    q = np.asarray(data[:4] + 0.01, np.float32)
+    with ServePipeline(SearchExecutor.from_index(idx, variant="inmem"),
+                       k=K, cfg=CFG, max_batch=4,
+                       result_cache_size=8) as pipe:
+        pipe.submit(q)
+        ids1, d1, _ = pipe.drain()           # misses: populate the LRU
+        pipe.submit(q)
+        ids2, d2, st = pipe.drain()          # pure cache-hit window
+        assert st.result_cache_hits == st.queries == 4
+        assert st.result_cache_hit_rate == 1.0
+        assert st.batches == 0               # executor never touched
+        # hits still have real enqueue->ready latencies
+        assert 0.0 < st.p50_ms <= st.p95_ms
+        np.testing.assert_array_equal(np.asarray(ids2), np.asarray(ids1))
+        np.testing.assert_array_equal(np.asarray(d2), np.asarray(d1))
